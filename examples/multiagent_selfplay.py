@@ -1,0 +1,19 @@
+"""Multiagent training through emulation: canonical agent ordering + a shared
+policy — the paper's Neural MMO competition pattern in miniature.
+
+  PYTHONPATH=src python examples/multiagent_selfplay.py
+"""
+from repro.configs.base import TrainConfig
+from repro.envs.ocean import Multiagent
+from repro.rl.trainer import Trainer
+
+trainer = Trainer(Multiagent(), TrainConfig(num_envs=64, unroll_length=64,
+                                            update_epochs=4,
+                                            num_minibatches=4,
+                                            learning_rate=1e-3, gamma=0.95),
+                  hidden=64)
+# one shared policy controls both agents; the env pays agent i only for
+# action i, so any scramble of the agent ordering caps the score at 0.5
+m = trainer.train(150_000, log_every=10, target_score=0.9)
+assert m["score"] >= 0.9, m
+print(f"selfplay solved: score={m['score']:.3f} — agent ordering intact")

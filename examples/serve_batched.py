@@ -1,0 +1,51 @@
+"""End-to-end serving driver: batched autoregressive decoding with a KV/SSM
+cache — prefill a batch of prompts, then stream tokens (serve_step), the
+program the decode_* dry-run shapes lower at 256-chip scale.
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch qwen3-0.6b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.policy import BackbonePolicy
+from repro.rl import actor
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-0.6b")
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--tokens", type=int, default=32)
+args = ap.parse_args()
+
+cfg = get_smoke_config(args.arch)
+policy = BackbonePolicy(cfg, tp=1)
+key = jax.random.PRNGKey(0)
+params = policy.init(key)
+
+# a batch of requests (random token prompts stand in for real ones)
+prompts = jax.random.randint(jax.random.fold_in(key, 1),
+                             (args.batch, args.prompt_len), 0, cfg.vocab_size)
+max_len = args.prompt_len + args.tokens
+
+prefill = jax.jit(actor.make_prefill_step(policy, max_len))
+serve = jax.jit(actor.make_serve_step(policy), donate_argnums=(2,))
+
+tok, value, caches = prefill(params, {"tokens": prompts},
+                             jax.random.fold_in(key, 2))
+jax.block_until_ready(tok)
+t0 = time.perf_counter()
+out = [tok]
+for i in range(args.tokens - 1):
+    tok, value, caches = serve(params, tok, caches, jax.random.fold_in(key, 3 + i))
+    out.append(tok)
+seq = jnp.concatenate(out, axis=1)
+jax.block_until_ready(seq)
+dt = time.perf_counter() - t0
+print(f"{cfg.name}: batch={args.batch} generated {seq.shape[1]} tokens each")
+print(f"throughput: {args.batch * (args.tokens - 1) / dt:.1f} tok/s "
+      f"(steady-state decode, CPU)")
+print("sample:", seq[0, :16].tolist())

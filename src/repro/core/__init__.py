@@ -1,0 +1,11 @@
+# The paper's primary contribution: emulation (structured<->flat layout
+# transforms), vectorization backends, and the EnvPool-style async pool.
+from repro.core import spaces, emulation, vector, pool
+from repro.core.emulation import (Emulated, flat_spec, emulate, unemulate,
+                                  action_spec, emulate_action, unemulate_action)
+from repro.core.vector import VecEnv, autotune
+from repro.core.pool import Pool
+
+__all__ = ["spaces", "emulation", "vector", "pool", "Emulated", "flat_spec",
+           "emulate", "unemulate", "action_spec", "emulate_action",
+           "unemulate_action", "VecEnv", "autotune", "Pool"]

@@ -1,0 +1,254 @@
+"""Emulation — the paper's §3.1, TPU edition.
+
+PufferLib's key insight: wrap any environment so it *looks like Atari* — a
+flat observation tensor and a single (multi)discrete action — with an exact
+inverse applied in the first line of the model's forward pass, so nothing is
+lost. The original implementation packs numpy structured arrays byte-wise
+(a Cythonized hot loop, paper §5). On TPU the same idea becomes a pair of
+pure, jittable layout transforms over pytrees:
+
+  * ``bytes`` mode — exact structured-array analogue: every leaf is bitcast
+    to uint8 and packed into one contiguous byte buffer. Lossless for every
+    dtype. This is the transport/vectorization format (one buffer ⇒ one
+    collective ⇒ zero-copy batching).
+  * ``f32`` mode — leaves promoted to float32 and concatenated. This is the
+    model-facing format (what an Atari-shaped network consumes).
+
+``unemulate`` restores the original tree exactly (bytes mode) or up to dtype
+promotion (f32 mode) — "no loss of generality".
+
+Startup-only shape checks, canonical ordering, and fixed-size padding for
+variable agent counts mirror the paper's remaining emulation features.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spaces as sp
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    path: tuple
+    shape: tuple
+    dtype: Any
+    offset: int          # element offset (mode units) into the flat buffer
+    size: int            # element count (mode units)
+
+
+@dataclass(frozen=True)
+class FlatSpec:
+    """Static packing plan for one space tree (computed once, host-side)."""
+    space: sp.Space
+    mode: str            # "f32" | "bytes"
+    leaf_specs: tuple
+    total: int
+
+    @property
+    def dtype(self):
+        return jnp.uint8 if self.mode == "bytes" else jnp.float32
+
+
+def flat_spec(space: sp.Space, mode: str = "f32") -> FlatSpec:
+    assert mode in ("f32", "bytes")
+    specs, offset = [], 0
+    for path, leaf in sp.leaves(space):
+        shape = sp.leaf_shape(leaf)
+        dtype = sp.leaf_dtype(leaf)
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        size = n * dtype.itemsize if mode == "bytes" else n
+        specs.append(LeafSpec(path, shape, dtype, offset, size))
+        offset += size
+    return FlatSpec(space, mode, tuple(specs), offset)
+
+
+def _to_u8(x):
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    if x.dtype != jnp.uint8:
+        x = jax.lax.bitcast_convert_type(x, jnp.uint8)
+    return x
+
+
+def _from_u8(flat_u8, shape, dtype):
+    if dtype == jnp.bool_:
+        return flat_u8.reshape(shape).astype(jnp.bool_)
+    if jnp.dtype(dtype) == jnp.uint8:
+        return flat_u8.reshape(shape)
+    itemsize = jnp.dtype(dtype).itemsize
+    x = flat_u8.reshape(shape + (itemsize,))
+    return jax.lax.bitcast_convert_type(x, dtype)
+
+
+def emulate(spec: FlatSpec, tree) -> jax.Array:
+    """Pack a (possibly batched) space element into one flat buffer.
+
+    Leading batch dimensions are inferred per-leaf from the static spec, so
+    the same function works unbatched, under vmap, or on pre-batched data —
+    the paper's "stack sub-environment data without extra copies".
+    """
+    parts = []
+    batch = None
+    for ls in spec.leaf_specs:
+        x = jnp.asarray(sp.get_path(tree, ls.path))
+        nb = x.ndim - len(ls.shape)
+        assert nb >= 0, f"leaf {ls.path}: got shape {x.shape}, want {ls.shape}"
+        b = x.shape[:nb]
+        assert batch is None or batch == b, "inconsistent batch dims"
+        batch = b
+        if spec.mode == "bytes":
+            x = _to_u8(x)
+        else:
+            x = x.astype(jnp.float32)
+        parts.append(x.reshape(b + (-1,)))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def unemulate(spec: FlatSpec, flat: jax.Array):
+    """Exact inverse of ``emulate`` — call this in the first line of the
+    model's forward pass (paper §3.1)."""
+    batch = flat.shape[:-1]
+    assert flat.shape[-1] == spec.total, (flat.shape, spec.total)
+    tree = sp.zeros(spec.space)
+    for ls in spec.leaf_specs:
+        chunk = jax.lax.slice_in_dim(flat, ls.offset, ls.offset + ls.size, axis=-1)
+        if spec.mode == "bytes":
+            leaf = _from_u8(chunk, batch + ls.shape, ls.dtype)
+        else:
+            leaf = chunk.reshape(batch + ls.shape).astype(ls.dtype)
+        tree = sp.set_path(tree, ls.path, leaf)
+    return tree
+
+
+# -- action emulation --------------------------------------------------------
+
+@dataclass(frozen=True)
+class ActionSpec:
+    """Action tree ⇔ single flat action vector (paper §3.1).
+
+    Discrete trees emulate to one MultiDiscrete (the paper's scheme);
+    continuous (all-Box) trees emulate to one flat Box — the paper lists
+    continuous actions as unsupported (§8); implemented here (beyond-paper).
+    Mixed trees are not supported."""
+    space: sp.Space
+    kind: str            # "discrete" | "continuous"
+    nvec: tuple
+    cont_dim: int
+    leaf_specs: tuple    # (path, leaf_shape, dtype, offset, size)
+
+    @property
+    def num_components(self) -> int:
+        return len(self.nvec) if self.kind == "discrete" else self.cont_dim
+
+
+def action_spec(space: sp.Space) -> ActionSpec:
+    import numpy as _np
+    leaves_ = list(sp.leaves(space))
+    boxes = [isinstance(l, sp.Box) for _, l in leaves_]
+    if any(boxes):
+        assert all(boxes), "mixed discrete/continuous action trees unsupported"
+        specs, offset = [], 0
+        for path, leaf in leaves_:
+            shape = sp.leaf_shape(leaf)
+            n = int(_np.prod(shape, dtype=_np.int64)) if shape else 1
+            specs.append(LeafSpec(path, shape, sp.leaf_dtype(leaf), offset, n))
+            offset += n
+        return ActionSpec(space, "continuous", (), offset, tuple(specs))
+    nvec = sp.num_actions(space)
+    specs, offset = [], 0
+    for path, leaf in leaves_:
+        if isinstance(leaf, sp.Discrete):
+            size, shape = 1, ()
+        else:  # MultiDiscrete
+            size, shape = len(leaf.nvec), (len(leaf.nvec),)
+        specs.append(LeafSpec(path, shape, sp.leaf_dtype(leaf), offset, size))
+        offset += size
+    return ActionSpec(space, "discrete", nvec, 0, tuple(specs))
+
+
+def unemulate_action(spec: ActionSpec, flat: jax.Array):
+    """(…, num_components) int32 → original action tree."""
+    batch = flat.shape[:-1]
+    tree = sp.zeros(spec.space)
+    for ls in spec.leaf_specs:
+        chunk = jax.lax.slice_in_dim(flat, ls.offset, ls.offset + ls.size, axis=-1)
+        leaf = chunk.reshape(batch + ls.shape).astype(ls.dtype)
+        tree = sp.set_path(tree, ls.path, leaf)
+    return tree
+
+
+def emulate_action(spec: ActionSpec, tree) -> jax.Array:
+    out_dtype = jnp.int32 if spec.kind == "discrete" else jnp.float32
+    parts = []
+    for ls in spec.leaf_specs:
+        x = jnp.asarray(sp.get_path(tree, ls.path)).astype(out_dtype)
+        nb = x.ndim - len(ls.shape)
+        parts.append(x.reshape(x.shape[:nb] + (-1,)))
+    return jnp.concatenate(parts, axis=-1)
+
+
+# -- environment wrapper ------------------------------------------------------
+
+class Emulated:
+    """One-line wrapper: ``env = Emulated(env)`` makes any structured env look
+    like Atari (flat Box obs, MultiDiscrete action) to everything downstream.
+
+    Also implements the paper's multiagent guarantees: observations are
+    agent-major in canonical (index) order, and variable agent counts are
+    padded to ``num_agents`` with a validity mask so data buffers stay fixed
+    size. Shape checks run once, at trace time — zero steady-state cost.
+    """
+
+    def __init__(self, env, mode: str = "f32"):
+        self.env = env
+        self.obs_spec = flat_spec(env.observation_space, mode)
+        self.act_spec = action_spec(env.action_space)
+        self.num_agents = getattr(env, "num_agents", 1)
+        self.observation_space = sp.Box((self.obs_spec.total,),
+                                        self.obs_spec.dtype)
+        self.action_space = (sp.MultiDiscrete(self.act_spec.nvec)
+                             if self.act_spec.kind == "discrete"
+                             else sp.Box((self.act_spec.cont_dim,)))
+        self._checked = False
+
+    # pure-functional env protocol (see envs/base.py)
+    def init(self, key):
+        return self.env.init(key)
+
+    def reset(self, state, key):
+        state, obs = self.env.reset(state, key)
+        return state, self._obs(obs)
+
+    def step(self, state, action, key):
+        action = unemulate_action(self.act_spec, action)
+        state, obs, rew, done, info = self.env.step(state, action, key)
+        return state, self._obs(obs), rew, done, info
+
+    def _obs(self, obs):
+        flat = emulate(self.obs_spec, obs)
+        if not self._checked:  # paper: check shapes on the first batch only
+            want = (self.num_agents, self.obs_spec.total) \
+                if self.num_agents > 1 else (self.obs_spec.total,)
+            assert flat.shape[-len(want):] == want, (flat.shape, want)
+            self._checked = True
+        return flat
+
+    def unemulate_obs(self, flat):
+        """First line of your model's forward pass."""
+        return unemulate(self.obs_spec, flat)
+
+
+def pad_agents(obs, mask, num_agents: int):
+    """Pad agent-major data to a fixed agent count (paper §3.1). ``mask``
+    marks live agents; padded rows are zero."""
+    cur = obs.shape[0]
+    if cur == num_agents:
+        return obs, mask
+    pad = [(0, num_agents - cur)] + [(0, 0)] * (obs.ndim - 1)
+    return jnp.pad(obs, pad), jnp.pad(mask, (0, num_agents - cur))

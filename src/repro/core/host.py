@@ -1,0 +1,95 @@
+"""Host-environment pool — the paper's Python EnvPool, faithfully.
+
+The JAX-native pool (core/pool.py) covers pure-functional envs. Real
+deployments also wrap *host* environments (NetHack, Pokémon Red — stateful
+Python/C processes). This module reproduces the paper's mechanism for those:
+simulate M envs on worker threads, return batches of N ≪ M from the **first
+finishers**, so the learner never waits on stragglers and env stepping
+overlaps policy compute. M = 2N ⇒ double buffering (paper §3.3).
+
+(Threads, not processes: env steps that block in C/sleep release the GIL,
+which is also how NLE/Atari steps behave. The paper's shared-memory and
+busy-wait micro-optimizations are process-world trivia — see DESIGN.md §2.)
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+
+class HostEnv:
+    """Stateful host env: numpy in/out. Subclass or duck-type."""
+
+    def reset(self, seed: int):                 # -> obs
+        raise NotImplementedError
+
+    def step(self, action):                     # -> (obs, rew, done, info)
+        raise NotImplementedError
+
+
+class HostPool:
+    """EnvPool semantics over host envs.
+
+    recv() -> (obs (N, …), rew (N,), done (N,), env_ids (N,))
+    send(actions, env_ids)
+
+    With num_envs == batch_size this degrades to synchronous vectorization
+    (wait for everyone) — the paper's baseline.
+    """
+
+    def __init__(self, env_fns: Sequence[Callable[[], HostEnv]],
+                 batch_size: int, seed: int = 0):
+        self.M = len(env_fns)
+        self.N = batch_size
+        assert self.N <= self.M
+        self._envs: List[HostEnv] = [fn() for fn in env_fns]
+        self._ready: "queue.Queue" = queue.Queue()
+        self._threads: List[threading.Thread] = []
+        self._inboxes: List["queue.Queue"] = [queue.Queue(1)
+                                              for _ in range(self.M)]
+        self._stop = False
+        for i, env in enumerate(self._envs):
+            t = threading.Thread(target=self._worker, args=(i,), daemon=True)
+            t.start()
+            self._threads.append(t)
+        for i in range(self.M):                 # initial resets
+            self._inboxes[i].put(("reset", seed + i))
+
+    def _worker(self, i: int):
+        env = self._envs[i]
+        while not self._stop:
+            cmd, arg = self._inboxes[i].get()
+            if cmd == "close":
+                return
+            if cmd == "reset":
+                obs = env.reset(arg)
+                self._ready.put((i, obs, 0.0, False))
+            else:
+                obs, rew, done, info = env.step(arg)
+                if done:
+                    obs = env.reset(None)
+                self._ready.put((i, obs, rew, done))
+
+    def recv(self):
+        """Block until the N first-finished envs have observations."""
+        items = [self._ready.get() for _ in range(self.N)]
+        ids = np.asarray([it[0] for it in items])
+        obs = np.stack([np.asarray(it[1]) for it in items])
+        rew = np.asarray([it[2] for it in items], np.float32)
+        done = np.asarray([it[3] for it in items], bool)
+        return obs, rew, done, ids
+
+    def send(self, actions, env_ids):
+        for a, i in zip(np.asarray(actions), env_ids):
+            self._inboxes[int(i)].put(("step", a))
+
+    def close(self):
+        self._stop = True
+        for i in range(self.M):
+            try:
+                self._inboxes[i].put_nowait(("close", None))
+            except queue.Full:
+                pass

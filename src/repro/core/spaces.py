@@ -1,0 +1,168 @@
+"""Observation/action space trees (Gym/Gymnasium `spaces` analogue).
+
+PufferLib's emulation layer operates on arbitrarily nested space trees. We
+define a minimal, hashable space algebra that covers what the paper handles:
+Box / Discrete / MultiDiscrete leaves composed by Dict / Tuple nodes.
+
+Spaces are static metadata — all functions here are trace-safe and the
+flattening specs derived from them are computed once, host-side (mirroring the
+paper's "shape checks only at startup").
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Space:
+    pass
+
+
+@dataclass(frozen=True)
+class Discrete(Space):
+    n: int
+    dtype: Any = jnp.int32
+
+
+@dataclass(frozen=True)
+class MultiDiscrete(Space):
+    nvec: tuple
+    dtype: Any = jnp.int32
+
+    def __post_init__(self):
+        object.__setattr__(self, "nvec", tuple(int(n) for n in self.nvec))
+
+
+@dataclass(frozen=True)
+class Box(Space):
+    shape: tuple
+    dtype: Any = jnp.float32
+    low: float = -np.inf
+    high: float = np.inf
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+
+
+@dataclass(frozen=True)
+class Dict(Space):
+    spaces: tuple  # ((key, space), ...) canonically sorted by key
+
+    def __init__(self, spaces: Mapping[str, Space]):
+        # Canonical key order — the paper sorts agent/space keys so that
+        # packed layouts are deterministic across processes.
+        object.__setattr__(
+            self, "spaces", tuple(sorted(spaces.items(), key=lambda kv: kv[0])))
+
+    def items(self):
+        return self.spaces
+
+
+@dataclass(frozen=True)
+class Tuple(Space):
+    spaces: tuple
+
+    def __init__(self, spaces: Sequence[Space]):
+        object.__setattr__(self, "spaces", tuple(spaces))
+
+
+# ---------------------------------------------------------------------------
+
+def leaves(space: Space, path: tuple = ()):
+    """Depth-first (path, leaf_space) pairs in canonical order."""
+    if isinstance(space, Dict):
+        for k, sub in space.items():
+            yield from leaves(sub, path + (k,))
+    elif isinstance(space, Tuple):
+        for i, sub in enumerate(space.spaces):
+            yield from leaves(sub, path + (i,))
+    else:
+        yield path, space
+
+
+def leaf_shape(space: Space) -> tuple:
+    if isinstance(space, Discrete):
+        return ()
+    if isinstance(space, MultiDiscrete):
+        return (len(space.nvec),)
+    if isinstance(space, Box):
+        return space.shape
+    raise TypeError(space)
+
+
+def leaf_dtype(space: Space):
+    return jnp.dtype(space.dtype)
+
+
+def zeros(space: Space):
+    """A zero element of the space as a pytree."""
+    if isinstance(space, Dict):
+        return {k: zeros(s) for k, s in space.items()}
+    if isinstance(space, Tuple):
+        return tuple(zeros(s) for s in space.spaces)
+    return jnp.zeros(leaf_shape(space), leaf_dtype(space))
+
+
+def sample(space: Space, key):
+    """Random element (uniform over the space) — used in tests/mocks."""
+    if isinstance(space, Dict):
+        ks = jax.random.split(key, len(space.spaces))
+        return {k: sample(s, kk) for (k, s), kk in zip(space.items(), ks)}
+    if isinstance(space, Tuple):
+        ks = jax.random.split(key, len(space.spaces))
+        return tuple(sample(s, kk) for s, kk in zip(space.spaces, ks))
+    if isinstance(space, Discrete):
+        return jax.random.randint(key, (), 0, space.n, leaf_dtype(space))
+    if isinstance(space, MultiDiscrete):
+        nvec = jnp.asarray(space.nvec)
+        u = jax.random.uniform(key, (len(space.nvec),))
+        return (u * nvec).astype(leaf_dtype(space))
+    if isinstance(space, Box):
+        lo = 0.0 if not np.isfinite(space.low) else space.low
+        hi = 1.0 if not np.isfinite(space.high) else space.high
+        x = jax.random.uniform(key, space.shape, jnp.float32, lo, hi)
+        return x.astype(leaf_dtype(space))
+    raise TypeError(space)
+
+
+def get_path(tree, path: tuple):
+    for p in path:
+        tree = tree[p]
+    return tree
+
+
+def set_path(tree, path: tuple, value):
+    """Functional set — rebuilds nested dict/tuple containers."""
+    if not path:
+        return value
+    head, rest = path[0], path[1:]
+    if isinstance(tree, dict):
+        out = dict(tree)
+        out[head] = set_path(tree[head], rest, value)
+        return out
+    if isinstance(tree, tuple):
+        out = list(tree)
+        out[head] = set_path(tree[head], rest, value)
+        return tuple(out)
+    raise TypeError(tree)
+
+
+def num_actions(space: Space) -> tuple:
+    """Flatten an action space tree to a single MultiDiscrete nvec — the
+    paper's action emulation. Continuous action leaves are handled separately
+    (beyond-paper; see emulation.ContinuousActionHead)."""
+    nvec = []
+    for _, leaf in leaves(space):
+        if isinstance(leaf, Discrete):
+            nvec.append(leaf.n)
+        elif isinstance(leaf, MultiDiscrete):
+            nvec.extend(leaf.nvec)
+        else:
+            raise TypeError(
+                f"discrete action emulation got {leaf}; use continuous head")
+    return tuple(nvec)

@@ -1,0 +1,52 @@
+"""Synthetic LM rollout batches (the data pipeline for backbone PPO).
+
+Real deployments stream rollouts from the actor fleet; here we provide the
+same batch contract (rl.learner.lm_batch_fields) filled with either
+ShapeDtypeStructs (dry-run) or random data (smoke/bench), plus a host-side
+ring buffer mirroring the pool's double-buffered handoff.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.rl.learner import lm_batch_fields
+
+
+def abstract_batch(cfg: ModelConfig, batch_size: int, seq_len: int):
+    return {k: jax.ShapeDtypeStruct(sh, dt)
+            for k, (sh, dt) in lm_batch_fields(cfg, batch_size, seq_len).items()}
+
+
+def random_batch(cfg: ModelConfig, batch_size: int, seq_len: int, key):
+    out = {}
+    for i, (k, (sh, dt)) in enumerate(
+            lm_batch_fields(cfg, batch_size, seq_len).items()):
+        kk = jax.random.fold_in(key, i)
+        if dt == jnp.int32:
+            out[k] = jax.random.randint(kk, sh, 0, cfg.vocab_size, dt)
+        elif dt == jnp.bool_:
+            out[k] = jax.random.bernoulli(kk, 0.02, sh)
+        else:
+            out[k] = jax.random.normal(kk, sh, jnp.float32).astype(dt) * 0.1
+    out["old_logprob"] = -jnp.abs(out["old_logprob"]) - 1.0
+    return out
+
+
+class RingBuffer:
+    """Double-buffered batch handoff (paper §3.3, learner side)."""
+
+    def __init__(self, slots: int = 2):
+        self._slots = [None] * slots
+        self._w = self._r = 0
+
+    def put(self, batch):
+        self._slots[self._w % len(self._slots)] = batch
+        self._w += 1
+
+    def get(self):
+        assert self._r < self._w, "ring buffer empty"
+        b = self._slots[self._r % len(self._slots)]
+        self._r += 1
+        return b

@@ -1,0 +1,122 @@
+"""Fault tolerance and straggler mitigation for the training loop.
+
+Mechanisms (DESIGN.md §4):
+  * checkpoint/restart — atomic committed checkpoints (checkpoint.ckpt),
+    ``resume_or_init`` picks up the latest on relaunch; restore works onto a
+    different mesh (elastic: 512 → 256 chips) because checkpoints are
+    sharding-agnostic.
+  * step-scoped retry — a failing step (device error, preemption signal)
+    triggers restore-from-last-commit and replay; repeated failure at the
+    same step aborts with a clear report (poison-pill detection).
+  * straggler detection — per-step wall times are tracked; hosts slower than
+    ``k×median`` over a window are flagged (on a real cluster the launcher
+    would re-shard around them; here we log and expose the signal).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint import ckpt
+
+
+class StragglerMonitor:
+    """Rolling per-step wall-time stats with k×median flagging (the paper's
+    EnvPool insight at pod scale: never wait on the slowest worker)."""
+
+    def __init__(self, window: int = 64, k: float = 2.0):
+        self.times = collections.deque(maxlen=window)
+        self.k = k
+        self.flagged = 0
+
+    def record(self, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) >= 8:
+            med = sorted(self.times)[len(self.times) // 2]
+            if dt > self.k * med:
+                self.flagged += 1
+                return True
+        return False
+
+    @property
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        return sorted(self.times)[len(self.times) // 2]
+
+
+class ResilientLoop:
+    """Wraps a jitted ``step(state, batch) -> (state, metrics)`` with
+    checkpoint/restart fault tolerance."""
+
+    def __init__(self, step_fn: Callable, ckpt_dir: str,
+                 save_every: int = 100, max_retries: int = 3,
+                 async_save: bool = True, shardings=None):
+        self.step_fn = step_fn
+        self.ckpt_dir = ckpt_dir
+        self.save_every = save_every
+        self.max_retries = max_retries
+        self.async_save = async_save
+        self.shardings = shardings
+        self.monitor = StragglerMonitor()
+        self._save_handle = None
+        self.steps_done = 0
+        self.recoveries = 0
+
+    def resume_or_init(self, init_state):
+        """Latest committed checkpoint if present, else the given state."""
+        path = ckpt.latest(self.ckpt_dir)
+        if path is None:
+            return init_state, 0
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), init_state)
+        state = ckpt.restore(path, like, self.shardings)
+        step = int(path.rsplit("_", 1)[1])
+        return state, step
+
+    def run(self, state, batches, on_metrics: Optional[Callable] = None):
+        """Iterate ``batches``; survives step failures via restore+replay."""
+        retries = 0
+        it = iter(batches)
+        pending = None
+        while True:
+            if pending is None:
+                try:
+                    pending = next(it)
+                except StopIteration:
+                    break
+            t0 = time.perf_counter()
+            try:
+                state, metrics = self.step_fn(state, pending)
+                jax.block_until_ready(jax.tree.leaves(metrics)[0])
+            except Exception as e:   # device failure / preemption
+                retries += 1
+                self.recoveries += 1
+                if retries > self.max_retries:
+                    raise RuntimeError(
+                        f"step {self.steps_done} failed {retries}x; "
+                        f"aborting (poison pill?)") from e
+                restored = ckpt.latest(self.ckpt_dir)
+                if restored is not None:
+                    state, _ = self.resume_or_init(state)
+                continue   # replay the same batch
+            retries = 0
+            slow = self.monitor.record(time.perf_counter() - t0)
+            if slow:
+                metrics = dict(metrics, straggler_flag=True)
+            self.steps_done += 1
+            pending = None
+            if on_metrics:
+                on_metrics(self.steps_done, metrics)
+            if self.steps_done % self.save_every == 0:
+                if self._save_handle is not None:
+                    self._save_handle.join()   # one in-flight save at a time
+                out = ckpt.save(self.ckpt_dir, state, step=self.steps_done,
+                                async_=self.async_save)
+                self._save_handle = out if self.async_save else None
+        if self._save_handle is not None:
+            self._save_handle.join()
+        return state

@@ -1,0 +1,101 @@
+"""Sharding rules: logical axes → the production mesh.
+
+One rules dict drives everything (params, optimizer states, batches, caches):
+
+  embed (d_model)            → FSDP over ("pod","data")   [ZeRO-3]
+  vocab/heads/kv_heads/mlp/expert/ssm_heads → "model"     [TP / EP]
+  batch                      → ("pod","data")             [DP]
+  ctx (long-context KV seq)  → ("pod","data")             [CP]
+
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import params as prm
+from repro.models import transformer as tr
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.optim.adamw import AdamWState
+from repro.rl.learner import TrainState, lm_batch_fields
+
+
+def make_rules(mesh: Mesh) -> dict:
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    fsdp = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    rules = dict(prm.DEFAULT_RULES)
+    rules.update({"embed": fsdp, "batch": fsdp, "ctx": fsdp})
+    return rules
+
+
+def named(mesh: Mesh, pspec_tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# -- train state ---------------------------------------------------------------
+
+def train_state_pspecs(policy, rules: dict) -> TrainState:
+    pp = prm.param_pspecs(policy.spec(), rules)
+    return TrainState(params=pp,
+                      opt=AdamWState(step=P(), m=pp, v=pp),
+                      step=P())
+
+
+def abstract_train_state(policy, opt_dtype) -> TrainState:
+    import jax.numpy as jnp
+    params = policy.abstract()
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(opt_dtype))
+    return TrainState(
+        params=params,
+        opt=AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                       m=jax.tree.map(zeros, params),
+                       v=jax.tree.map(zeros, params)),
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+# -- batches -------------------------------------------------------------------
+
+def lm_batch_pspecs(cfg: ModelConfig, rules: dict) -> dict:
+    b = rules["batch"]
+    out = {}
+    for k, (shape, _) in lm_batch_fields(cfg, 1, 1 + (cfg.frontend_prefix
+                                                      if cfg.frontend else 0)
+                                         ).items():
+        out[k] = P(*([b] + [None] * (len(shape) - 1)))
+    return out
+
+
+# -- caches ---------------------------------------------------------------------
+
+def cache_pspecs(cfg: ModelConfig, rules: dict,
+                 context_parallel: bool = False) -> tr.Caches:
+    """PartitionSpec tree mirroring transformer.Caches. decode_32k shards
+    batch over DP; long_500k (context_parallel, B=1) shards the KV sequence
+    dim over the DP axes instead."""
+    b, c = rules["batch"], rules["ctx"]
+    period = tr.stack_period(cfg)
+    kv, ssm = {}, {}
+    for i in range(period):
+        mixer, _ = tr.layer_kinds(cfg, i)
+        if mixer == "attn":
+            if context_parallel:
+                spec = P(None, None, c, "model", None)
+            else:
+                spec = P(None, b, None, "model", None)
+            kv[f"l{i}"] = attn_mod.KVCache(k=spec, v=spec, length=P(None))
+        else:
+            bb = None if context_parallel else b
+            ssm[f"l{i}"] = ssm_mod.SSMCache(
+                conv=P(None, bb, None, "model"),
+                state=P(None, bb, "model", None, None))
+    return tr.Caches(kv=kv, ssm=ssm, length=P())
+
+
+def abstract_caches(cfg: ModelConfig, tp: int, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: tr.init_caches(cfg, tp, batch, max_len))

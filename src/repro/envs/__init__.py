@@ -1,0 +1,2 @@
+from repro.envs import base, ocean
+from repro.envs.ocean import OCEAN, make

@@ -1,0 +1,49 @@
+"""Pure-functional environment protocol.
+
+The TPU analogue of a Gym env: ``init``/``reset``/``step`` are pure, jittable
+functions over a state pytree. All randomness is explicit (keys), all shapes
+static. ``info`` is a fixed-shape pytree with a validity flag — the TPU
+analogue of the paper's "empty infos are pruned" (no host sync unless you
+fetch them).
+
+Multiagent envs return agent-major arrays in canonical (index) order with a
+live-agent mask; ``done`` is episode-scoped. This bakes the paper's canonical
+sorting + padding guarantees into the protocol itself.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spaces as sp
+
+
+def empty_info():
+    return {
+        "score": jnp.zeros((), jnp.float32),
+        "episode_return": jnp.zeros((), jnp.float32),
+        "episode_length": jnp.zeros((), jnp.int32),
+        "valid": jnp.zeros((), jnp.bool_),   # True only on episode end
+    }
+
+
+def make_info(score, episode_return, episode_length):
+    return {
+        "score": jnp.asarray(score, jnp.float32),
+        "episode_return": jnp.asarray(episode_return, jnp.float32),
+        "episode_length": jnp.asarray(episode_length, jnp.int32),
+        "valid": jnp.ones((), jnp.bool_),
+    }
+
+
+@runtime_checkable
+class Env(Protocol):
+    observation_space: sp.Space
+    action_space: sp.Space
+    num_agents: int
+
+    def init(self, key) -> Any: ...
+    def reset(self, state, key): ...          # -> (state, obs)
+    def step(self, state, action, key): ...   # -> (state, obs, rew, done, info)

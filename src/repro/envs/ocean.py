@@ -1,0 +1,367 @@
+"""Puffer Ocean (paper §4) in pure JAX.
+
+Each environment is trivial with a correct PPO implementation and impossible
+with one specific common bug. All train in well under a minute on one CPU
+core; the whole suite is a coffee-break sanity check, never a benchmark.
+
+  Squared     — dense shaped reward; catches reward/advantage sign bugs.
+  Password    — sparse exploration; catches premature determinization.
+  Stochastic  — optimal policy is nonuniform-stochastic; catches entropy bugs.
+  Memory      — recall after delay; catches broken recurrent state handling.
+  Multiagent  — per-agent credit; catches agent-ordering scrambles.
+  Spaces      — nested Dict obs + Dict action; catches emulation bugs.
+  Bandit      — classic multiarmed bandit; catches value-baseline bugs.
+  Continuous  — Box actions through a Gaussian head (beyond-paper: the
+                paper lists continuous actions as unsupported, §8).
+
+Scores are normalized so "solved" is score > 0.9 (paper: ~30k interactions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spaces as sp
+from repro.envs.base import empty_info, make_info
+
+
+def _end_info(done, ep_return, t, score):
+    info = empty_info()
+    return {
+        "score": jnp.where(done, score, 0.0).astype(jnp.float32),
+        "episode_return": jnp.where(done, ep_return, 0.0).astype(jnp.float32),
+        "episode_length": jnp.where(done, t, 0).astype(jnp.int32),
+        "valid": done,
+    }
+
+
+class Squared:
+    """Agent starts at the center of a g×g grid; targets on the perimeter.
+    Reward = 1 − normalized L∞ distance to the closest unhit target ∈ [−1, 1];
+    hit targets stop paying; episode ends when all are hit (or at horizon).
+    Score = return / optimal return (perfect perimeter sweep) ∈ [0, 1]."""
+
+    num_agents = 1
+
+    def __init__(self, size: int = 5, horizon: int = 32):
+        assert size % 2 == 1
+        self.size, self.horizon = size, horizon
+        self.observation_space = sp.Box((size, size))
+        self.action_space = sp.Discrete(5)        # stay, N, S, W, E
+        g = size
+        per = np.zeros((g, g), bool)
+        per[0, :] = per[-1, :] = per[:, 0] = per[:, -1] = True
+        self._perimeter = jnp.asarray(per)
+        self._coords = jnp.stack(jnp.meshgrid(jnp.arange(g), jnp.arange(g),
+                                              indexing="ij"), -1)  # (g,g,2)
+        # optimal return: approach rewards + one reward-1 per perimeter cell
+        r = g // 2
+        self._optimal = float(sum(1.0 - d / r for d in range(1, r))
+                              + 4 * (g - 1))
+
+    def init(self, key):
+        g = self.size
+        return {"pos": jnp.full((2,), g // 2, jnp.int32),
+                "hit": jnp.zeros((g, g), jnp.bool_),
+                "t": jnp.zeros((), jnp.int32),
+                "ret": jnp.zeros((), jnp.float32)}
+
+    def reset(self, state, key):
+        return self.init(key), self._obs(self.init(key))
+
+    def _obs(self, s):
+        g = self.size
+        grid = jnp.where(self._perimeter & ~s["hit"], 0.5, 0.0)
+        return grid.at[s["pos"][0], s["pos"][1]].set(1.0)
+
+    def step(self, state, action, key):
+        g = self.size
+        moves = jnp.asarray([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]])
+        pos = jnp.clip(state["pos"] + moves[action], 0, g - 1)
+        active = self._perimeter & ~state["hit"]
+        dist = jnp.max(jnp.abs(self._coords - pos), -1)          # L-inf
+        d = jnp.min(jnp.where(active, dist, g * 2))
+        any_left = jnp.any(active)
+        reward = jnp.where(any_left, 1.0 - d.astype(jnp.float32) / (g // 2), 0.0)
+        hit = state["hit"] | (active & jnp.all(self._coords == pos, -1))
+        t = state["t"] + 1
+        ret = state["ret"] + reward
+        done = (t >= self.horizon) | jnp.all(hit | ~self._perimeter)
+        score = jnp.clip(ret / self._optimal, 0.0, 1.0)
+        s2 = {"pos": pos, "hit": hit, "t": t, "ret": ret}
+        return s2, self._obs(s2), reward, done, _end_info(done, ret, t, score)
+
+
+class Password:
+    """Guess a static binary string, one bit per step; reward only if the
+    whole string matches. Tests exploration / premature determinization."""
+
+    num_agents = 1
+    PASSWORD = (1, 0, 1, 1, 0)
+
+    def __init__(self):
+        self.length = len(self.PASSWORD)
+        self.observation_space = sp.Box((self.length,))
+        self.action_space = sp.Discrete(2)
+        self._pw = jnp.asarray(self.PASSWORD, jnp.int32)
+
+    def init(self, key):
+        return {"t": jnp.zeros((), jnp.int32),
+                "ok": jnp.ones((), jnp.bool_)}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, self._obs(s)
+
+    def _obs(self, s):
+        return jax.nn.one_hot(s["t"] % self.length, self.length)
+
+    def step(self, state, action, key):
+        ok = state["ok"] & (action == self._pw[state["t"]])
+        t = state["t"] + 1
+        done = t >= self.length
+        reward = jnp.where(done & ok, 1.0, 0.0)
+        score = reward
+        s2 = {"t": t, "ok": ok}
+        return s2, self._obs(s2), reward, done, _end_info(done, reward, t, score)
+
+
+class Stochastic:
+    """Optimal policy plays action 0 with probability p. The observation is
+    constant, so only a *stochastic* policy scores > 0.9: score at episode end
+    is max(0, 1 − 2·|freq₀ − p|)."""
+
+    num_agents = 1
+
+    def __init__(self, p: float = 0.75, horizon: int = 64):
+        self.p, self.horizon = p, horizon
+        self.observation_space = sp.Box((1,))
+        self.action_space = sp.Discrete(2)
+
+    def init(self, key):
+        return {"t": jnp.zeros((), jnp.int32),
+                "count0": jnp.zeros((), jnp.int32)}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, jnp.zeros((1,))
+
+    def step(self, state, action, key):
+        count0 = state["count0"] + (action == 0).astype(jnp.int32)
+        t = state["t"] + 1
+        done = t >= self.horizon
+        freq = count0.astype(jnp.float32) / t.astype(jnp.float32)
+        score = jnp.maximum(0.0, 1.0 - 2.0 * jnp.abs(freq - self.p))
+        reward = jnp.where(done, score, 0.0)
+        s2 = {"t": t, "count0": count0}
+        return s2, jnp.zeros((1,)), reward, done, _end_info(done, reward, t, score)
+
+
+class Memory:
+    """Repeat an observed random bit sequence after a delay. Obs shows the
+    sequence one symbol at a time, then zeros; actions during the recall phase
+    must reproduce it. Unsolvable without memory (recurrent policy)."""
+
+    num_agents = 1
+
+    def __init__(self, length: int = 3):
+        self.length = length
+        self.horizon = 2 * length
+        self.observation_space = sp.Box((3,))   # one-hot: [silent, bit0, bit1]
+        self.action_space = sp.Discrete(2)
+
+    def init(self, key):
+        seq = jax.random.bernoulli(key, 0.5, (self.length,)).astype(jnp.int32)
+        return {"seq": seq, "t": jnp.zeros((), jnp.int32),
+                "correct": jnp.zeros((), jnp.int32)}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, self._obs(s)
+
+    def _obs(self, s):
+        t, L = s["t"], self.length
+        showing = t < L
+        sym = jnp.where(showing, s["seq"][jnp.minimum(t, L - 1)] + 1, 0)
+        return jax.nn.one_hot(sym, 3)
+
+    def step(self, state, action, key):
+        t, L = state["t"], self.length
+        recall = t >= L
+        target = state["seq"][jnp.clip(t - L, 0, L - 1)]
+        hit = recall & (action == target)
+        correct = state["correct"] + hit.astype(jnp.int32)
+        reward = jnp.where(hit, 1.0 / L, 0.0)
+        t2 = t + 1
+        done = t2 >= self.horizon
+        score = correct.astype(jnp.float32) / L
+        s2 = {"seq": state["seq"], "t": t2, "correct": correct}
+        ret = score  # episodic return equals score here
+        return s2, self._obs(s2), reward, done, _end_info(done, ret, t2, score)
+
+
+class Multiagent:
+    """Agent 0 must pick action 0; agent 1 must pick action 1. Catches any
+    scramble of the canonical agent ordering (score pins to 0.5)."""
+
+    num_agents = 2
+
+    def __init__(self, horizon: int = 8):
+        self.horizon = horizon
+        self.observation_space = sp.Box((2,))    # per-agent one-hot id
+        self.action_space = sp.Discrete(2)
+
+    def init(self, key):
+        return {"t": jnp.zeros((), jnp.int32),
+                "ret": jnp.zeros((2,), jnp.float32)}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, jnp.eye(2)
+
+    def step(self, state, action, key):
+        # action: (2,) — agent-major, canonical order
+        correct = (action == jnp.arange(2)).astype(jnp.float32)
+        ret = state["ret"] + correct
+        t = state["t"] + 1
+        done = t >= self.horizon
+        score = jnp.mean(ret) / self.horizon
+        s2 = {"t": t, "ret": ret}
+        info = _end_info(done, jnp.sum(ret), t, score)
+        return s2, jnp.eye(2), correct, done, info
+
+
+class Spaces:
+    """Hierarchical observation AND action spaces. A hidden bit lives in the
+    center of obs["image"] and another in obs["flat"][0]; action "a" must match
+    the image bit and action "b" the flat bit. Maximal score requires using
+    every subspace — a learned end-to-end test of emulation."""
+
+    num_agents = 1
+
+    def __init__(self, horizon: int = 8):
+        self.horizon = horizon
+        self.observation_space = sp.Dict({
+            "image": sp.Box((3, 3)),
+            "flat": sp.Box((4,)),
+        })
+        self.action_space = sp.Dict({
+            "a": sp.Discrete(2),
+            "b": sp.Discrete(2),
+        })
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"img_bit": jax.random.bernoulli(k1).astype(jnp.int32),
+                "flat_bit": jax.random.bernoulli(k2).astype(jnp.int32),
+                "t": jnp.zeros((), jnp.int32),
+                "ret": jnp.zeros((), jnp.float32)}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, self._obs(s)
+
+    def _obs(self, s):
+        img = jnp.zeros((3, 3)).at[1, 1].set(s["img_bit"].astype(jnp.float32))
+        flat = jnp.zeros((4,)).at[0].set(s["flat_bit"].astype(jnp.float32))
+        return {"image": img, "flat": flat}
+
+    def step(self, state, action, key):
+        ra = (action["a"] == state["img_bit"]).astype(jnp.float32)
+        rb = (action["b"] == state["flat_bit"]).astype(jnp.float32)
+        reward = 0.5 * ra + 0.5 * rb
+        ret = state["ret"] + reward
+        t = state["t"] + 1
+        done = t >= self.horizon
+        k1, k2, _ = jax.random.split(key, 3)
+        s2 = {"img_bit": jax.random.bernoulli(k1).astype(jnp.int32),
+              "flat_bit": jax.random.bernoulli(k2).astype(jnp.int32),
+              "t": t, "ret": ret}
+        score = ret / self.horizon
+        return s2, self._obs(s2), reward, done, _end_info(done, ret, t, score)
+
+
+class Bandit:
+    """Classic multiarmed bandit: stochastic payouts, fixed arm probabilities.
+    Score = mean reward / best-arm payout."""
+
+    num_agents = 1
+    PROBS = (0.2, 0.5, 0.1, 0.9)
+
+    def __init__(self, horizon: int = 16):
+        self.horizon = horizon
+        self.observation_space = sp.Box((1,))
+        self.action_space = sp.Discrete(len(self.PROBS))
+        self._probs = jnp.asarray(self.PROBS)
+
+    def init(self, key):
+        return {"t": jnp.zeros((), jnp.int32),
+                "ret": jnp.zeros((), jnp.float32)}
+
+    def reset(self, state, key):
+        return self.init(key), jnp.zeros((1,))
+
+    def step(self, state, action, key):
+        reward = jax.random.bernoulli(key, self._probs[action]).astype(jnp.float32)
+        ret = state["ret"] + reward
+        t = state["t"] + 1
+        done = t >= self.horizon
+        score = ret / (self.horizon * max(self.PROBS))
+        s2 = {"t": t, "ret": ret}
+        return s2, jnp.zeros((1,)), reward, done, _end_info(done, ret, t, score)
+
+
+OCEAN = {
+    "squared": Squared,
+    "password": Password,
+    "stochastic": Stochastic,
+    "memory": Memory,
+    "multiagent": Multiagent,
+    "spaces": Spaces,
+    "bandit": Bandit,
+}
+
+
+def make(name: str, **kw):
+    return OCEAN[name](**kw)
+
+
+class Continuous:
+    """1-D target tracking with a continuous Box action — exercises the
+    Gaussian policy head (the paper's §8 limitation, supported here).
+    Reward per step = 1 − |pos − target|; optimal is a one-step jump."""
+
+    num_agents = 1
+
+    def __init__(self, horizon: int = 16):
+        self.horizon = horizon
+        self.observation_space = sp.Box((2,))
+        self.action_space = sp.Box((1,), low=-1.0, high=1.0)
+
+    def init(self, key):
+        return {"pos": jnp.zeros(()), 
+                "target": jax.random.uniform(key, (), minval=-0.8,
+                                             maxval=0.8),
+                "t": jnp.zeros((), jnp.int32),
+                "ret": jnp.zeros(())}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, self._obs(s)
+
+    def _obs(self, s):
+        return jnp.stack([s["pos"], s["target"]])
+
+    def step(self, state, action, key):
+        a = jnp.clip(jnp.reshape(action, ()), -1.0, 1.0)
+        pos = jnp.clip(state["pos"] + a, -1.0, 1.0)
+        reward = 1.0 - jnp.abs(pos - state["target"])
+        ret = state["ret"] + reward
+        t = state["t"] + 1
+        done = t >= self.horizon
+        score = jnp.clip(ret / self.horizon, 0.0, 1.0)
+        s2 = {"pos": pos, "target": state["target"], "t": t, "ret": ret}
+        return s2, self._obs(s2), reward, done, _end_info(done, ret, t, score)
+
+OCEAN["continuous"] = Continuous

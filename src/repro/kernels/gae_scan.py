@@ -1,0 +1,83 @@
+"""GAE as a Pallas kernel — PPO's sequential bottleneck, blocked in time.
+
+GAE is a length-T reverse scalar recurrence per environment: tiny FLOPs,
+purely memory-bound, and painful as T separate XLA ops. We tile (block_b
+envs × block_t steps) into VMEM and walk time blocks in reverse via the
+index map; the carried (advantage, next-value) pair lives in VMEM scratch
+across the sequential time-grid dimension. One launch, one pass over HBM.
+
+Grid: (B / block_b, T / block_t) — time dim sequential, reversed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, v_ref, nt_ref, lastv_ref, adv_ref, carry_ref, *,
+            gamma: float, lam: float, block_t: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        # carry rows: [0] = A_{t+1}, [1] = V_{t+1}
+        carry_ref[0, :] = jnp.zeros_like(carry_ref[0, :])
+        carry_ref[1, :] = lastv_ref[:, 0].astype(jnp.float32)
+
+    r = r_ref[...].astype(jnp.float32)        # (bb, bt)
+    v = v_ref[...].astype(jnp.float32)
+    nt = nt_ref[...].astype(jnp.float32)
+
+    def step(i, carry):
+        adv_next, v_next = carry
+        t = block_t - 1 - i
+        rt = jax.lax.dynamic_slice_in_dim(r, t, 1, 1)[:, 0]
+        vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 1)[:, 0]
+        ntt = jax.lax.dynamic_slice_in_dim(nt, t, 1, 1)[:, 0]
+        delta = rt + gamma * v_next * ntt - vt
+        adv = delta + gamma * lam * ntt * adv_next
+        adv_ref[:, t] = adv.astype(adv_ref.dtype)
+        return adv, vt
+
+    carry = (carry_ref[0, :], carry_ref[1, :])
+    adv, vt = jax.lax.fori_loop(0, block_t, step, carry)
+    carry_ref[0, :] = adv
+    carry_ref[1, :] = vt
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "lam", "block_b",
+                                             "block_t", "interpret"))
+def gae(rewards, values, dones, last_value, gamma: float, lam: float,
+        *, block_b: int = 128, block_t: int = 128, interpret: bool = False):
+    """Same contract as ref.gae. rewards/values/dones: (B, T);
+    last_value: (B,). Returns advantages (B, T) float32."""
+    B, T = rewards.shape
+    block_b = min(block_b, B)
+    block_t = min(block_t, T)
+    assert B % block_b == 0 and T % block_t == 0
+    nb, ntb = B // block_b, T // block_t
+    nonterm = 1.0 - dones.astype(jnp.float32)
+
+    grid = (nb, ntb)
+    rev = lambda b, t, n=ntb: (b, n - 1 - t)   # walk time blocks in reverse
+    return pl.pallas_call(
+        functools.partial(_kernel, gamma=gamma, lam=lam, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_t), rev),
+            pl.BlockSpec((block_b, block_t), rev),
+            pl.BlockSpec((block_b, block_t), rev),
+            pl.BlockSpec((block_b, 1), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_t), rev),
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((2, block_b), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(rewards.astype(jnp.float32), values.astype(jnp.float32), nonterm,
+      last_value.astype(jnp.float32)[:, None])

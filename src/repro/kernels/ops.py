@@ -1,0 +1,93 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+``mode``:
+  auto      — Pallas on TPU, jnp reference elsewhere (CPU dev / dry-run:
+              the lowered HLO of the reference has equivalent roofline terms,
+              see EXPERIMENTS.md §Roofline notes)
+  pallas    — compiled Pallas (TPU)
+  interpret — Pallas body interpreted in Python (CPU correctness tests)
+  ref       — pure-jnp oracle
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd as _ssd
+from repro.kernels import gae_scan as _gae
+from repro.kernels import pack as _pack
+from repro.kernels import quant_matmul as _qmm
+from repro.kernels import flash_decode as _fd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: str) -> str:
+    if mode == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return mode
+
+
+# "KERNEL_" named scopes mark regions whose HLO stands in for a Pallas kernel
+# during CPU dry-run lowering: launch.hlo_analysis excludes their *internal*
+# HBM traffic (VMEM-resident on the real TPU kernel) while keeping their
+# FLOPs. Inputs/outputs are still counted by the unmarked neighbor ops.
+
+
+def flash_attention(q, k, v, causal: bool = True, mode: str = "auto",
+                    block_q: int = 128, block_k: int = 128):
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.flash_attention(q, k, v, causal=causal)
+    if m == "chunked":   # kernel-equivalent jnp program (dry-run lowering)
+        with jax.named_scope("KERNEL_flash"):
+            return _ref.flash_attention_chunked(q, k, v, causal=causal)
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=(m == "interpret"))
+
+
+def ssd(x, dt, A, B_, C, chunk: int = 128, mode: str = "auto"):
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.ssd(x, dt, A, B_, C)
+    if m == "chunked":
+        with jax.named_scope("KERNEL_ssd"):
+            return _ref.ssd_chunked(x, dt, A, B_, C, chunk=chunk)
+    return _ssd.ssd(x, dt, A, B_, C, chunk=chunk, interpret=(m == "interpret"))
+
+
+def gae(rewards, values, dones, last_value, gamma: float, lam: float,
+        mode: str = "auto", block_t: int = 128):
+    m = _resolve(mode)
+    if m in ("ref", "chunked"):
+        with jax.named_scope("KERNEL_gae"):
+            return _ref.gae(rewards, values, dones, last_value, gamma, lam)
+    return _gae.gae(rewards, values, dones, last_value, gamma, lam,
+                    block_t=block_t, interpret=(m == "interpret"))
+
+
+def pack(leaves, mode: str = "auto"):
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.pack(leaves)
+    return _pack.pack(leaves, interpret=(m == "interpret"))
+
+
+def quant_matmul(x, w_q, scale, mode: str = "auto"):
+    m = _resolve(mode)
+    if m in ("ref", "chunked"):
+        with jax.named_scope("KERNEL_qmm"):
+            return _ref.quant_matmul(x, w_q, scale)
+    return _qmm.quant_matmul(x, w_q, scale, interpret=(m == "interpret"))
+
+
+def flash_decode(q, k, v, length, mode: str = "auto", block_s: int = 512):
+    m = _resolve(mode)
+    if m in ("ref", "chunked"):
+        with jax.named_scope("KERNEL_flash_decode"):
+            return _ref.flash_decode(q, k, v, length)
+    return _fd.flash_decode(q, k, v, length, block_s=block_s,
+                            interpret=(m == "interpret"))

@@ -1,0 +1,44 @@
+"""Emulation byte-packing as a Pallas kernel — the paper's §5 hot loop.
+
+PufferLib Cythonizes the structured-array pack because it sits on every
+env→learner transfer. The TPU edition: K flat u8 leaves are DMA'd into one
+contiguous output buffer at static offsets, a batch-tile at a time. The
+offsets come from the same static FlatSpec the emulation layer computes at
+startup, so the kernel body is pure data movement (memory-roofline op).
+
+Grid: (B / block_b,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(*refs, sizes: tuple):
+    in_refs, o_ref = refs[:-1], refs[-1]
+    off = 0
+    for r, n in zip(in_refs, sizes):
+        o_ref[:, off:off + n] = r[...]
+        off += n
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def pack(leaves, *, block_b: int = 256, interpret: bool = False):
+    """[(B, n_i) u8] -> (B, sum n_i) u8 — one contiguous buffer per batch row."""
+    B = leaves[0].shape[0]
+    sizes = tuple(l.shape[1] for l in leaves)
+    total = sum(sizes)
+    block_b = min(block_b, B)
+    assert B % block_b == 0
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        functools.partial(_kernel, sizes=sizes),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, n), lambda b: (b, 0)) for n in sizes],
+        out_specs=pl.BlockSpec((block_b, total), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, total), jnp.uint8),
+        interpret=interpret,
+    )(*leaves)

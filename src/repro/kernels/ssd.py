@@ -1,0 +1,110 @@
+"""Mamba2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+The SSD insight: within a chunk of Q timesteps the recurrence collapses to a
+masked (semiseparable) attention-like matmul — MXU food — while states are
+passed *between* chunks by a cheap rank-preserving recurrence. We tile one
+(head, chunk) per grid cell; the (hd × ds) state lives in VMEM scratch and is
+carried across the sequential chunk dimension of the grid, so the whole
+sequence is processed with one kernel launch and zero HBM state traffic.
+
+Grid: (B*H, num_chunks) — last dim sequential (state carry).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hlast_ref, h_ref, *,
+            chunk: int, num_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)         # (Q, hd)
+    dt = dt_ref[0].astype(jnp.float32)       # (Q, 1)
+    A = a_ref[0, 0]                          # scalar decay rate (negative)
+    B = b_ref[0].astype(jnp.float32)         # (Q, ds)
+    C = c_ref[0].astype(jnp.float32)         # (Q, ds)
+
+    dA = dt[:, 0] * A                        # (Q,)
+    cum = jnp.cumsum(dA)                     # inclusive (Q,)
+
+    # Within-chunk (the "duality": a decay-masked attention matmul)
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, None] - cum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(rows >= cols, jnp.exp(li), 0.0)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # (Q,Q)
+    y = jax.lax.dot_general(scores * L * dt[:, 0][None, :], x,
+                            (((1,), (0,)), ((), ())))              # (Q,hd)
+
+    # Inter-chunk: contribution of the carried state
+    decay_in = jnp.exp(cum)[:, None]                               # (Q,1)
+    h = h_ref[...]                                                 # (hd,ds)
+    y = y + decay_in * jax.lax.dot_general(C, h,
+                                           (((1,), (1,)), ((), ())))
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # State update: h' = exp(cum_Q) h + sum_j exp(cum_Q - cum_j) dt_j x_j B_j^T
+    w = (jnp.exp(cum[-1] - cum) * dt[:, 0])[:, None]               # (Q,1)
+    upd = jax.lax.dot_general(x * w, B, (((0,), (0,)), ((), ())))  # (hd,ds)
+    h_ref[...] = jnp.exp(cum[-1]) * h + upd
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        hlast_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B_, C, *, chunk: int = 128, interpret: bool = False):
+    """Same contract as ref.ssd (h0 = 0). x: (B,T,H,hd), dt: (B,T,H),
+    A: (H,), B_/C: (B,T,H,ds). Returns (y, h_last)."""
+    Bb, T, H, hd = x.shape
+    ds = B_.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    BH = Bb * H
+
+    # (B,T,H,*) -> (B*H, T, *)
+    xh = jnp.moveaxis(x, 2, 1).reshape(BH, T, hd)
+    dth = jnp.moveaxis(dt, 2, 1).reshape(BH, T, 1)
+    bh = jnp.moveaxis(B_, 2, 1).reshape(BH, T, ds)
+    ch = jnp.moveaxis(C, 2, 1).reshape(BH, T, ds)
+    ah = jnp.tile(A.astype(jnp.float32)[:, None], (Bb, 1))        # (BH, 1)
+
+    grid = (BH, nc)
+    y, hlast = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, num_chunks=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd, ds), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, hd), x.dtype),
+            jax.ShapeDtypeStruct((BH, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xh, dth, ah, bh, ch)
+
+    y = jnp.moveaxis(y.reshape(Bb, H, T, hd), 1, 2)
+    return y, hlast.reshape(Bb, H, hd, ds)

@@ -1,0 +1,308 @@
+"""Multi-pod dry-run: prove every (architecture × shape × mesh) cell lowers,
+partitions, and compiles on the production meshes — without hardware.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.json]
+"""
+# The CPU container exposes one real device; the dry-run builds the 512-chip
+# mesh out of host placeholder devices. MUST run before any other jax import.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCHS, SHAPES, get_config, check_applicable,
+                           ShapeNotApplicable, with_overrides)
+from repro.configs.base import TrainConfig
+from repro.data.buffer import abstract_batch
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.policy import BackbonePolicy
+from repro.rl import actor
+from repro.rl.learner import make_lm_train_step
+
+# v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link direction
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+([a-z0-9]+)\[([\d,]*)\]\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8, "c64": 8}
+
+# ring-transfer multiplier per op kind (bytes actually crossing links per
+# chip ≈ factor × result_bytes; documented in EXPERIMENTS.md §Roofline)
+_COLLECTIVE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0,
+                      "reduce-scatter": 1.0, "all-to-all": 1.0,
+                      "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective in post-optimization HLO,
+    weighted by the ring-transfer factor."""
+    out = {k: 0.0 for k in _COLLECTIVE_FACTOR}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[op] += n * _DTYPE_BYTES[dtype]
+    out["weighted_total"] = sum(_COLLECTIVE_FACTOR[k] * v
+                                for k, v in out.items() if k in
+                                _COLLECTIVE_FACTOR)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for
+    inference (D = tokens processed this step)."""
+    from repro.models.params import param_count
+    from repro.models import transformer as tr
+    pol = BackbonePolicy(cfg, tp=1)
+    n_total = param_count(pol.spec())
+    # active params: replace full expert count by top_k experts
+    if cfg.num_experts:
+        moe_layers = sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers))
+        per_expert = 3 * cfg.d_model * cfg.expert_d_ff
+        n_active = n_total - moe_layers * (cfg.num_experts - cfg.top_k) \
+            * per_expert
+    else:
+        n_active = n_total
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch     # decode: one token/seq
+
+
+def input_specs(arch: str, shape_name: str, tp: int = 16):
+    """ShapeDtypeStruct stand-ins for every model input of one cell —
+    weak-type-correct, shardable, no device allocation.
+
+    train_*  -> the PPO rollout batch (tokens, actions, logprobs, rewards,
+                dones, values[, prefix for vlm/audio stubs])
+    prefill_* -> {"tokens"[, "prefix"]}
+    decode_* / long_* -> (tokens (B,1), caches) for one serve_step
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    check_applicable(cfg, shape)
+    if shape.kind == "train":
+        return abstract_batch(cfg, shape.global_batch, shape.seq_len)
+    P_pref = cfg.frontend_prefix if cfg.frontend else 0
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len - P_pref), jnp.int32)}
+        if P_pref:
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, P_pref, cfg.d_model), jnp.bfloat16)
+        return specs
+    return {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "caches": shd.abstract_caches(cfg, tp, shape.global_batch,
+                                      shape.seq_len),
+    }
+
+
+def build_program(arch: str, shape_name: str, mesh, *,
+                  opt_dtype="bfloat16", remat="full", loss_chunk=256,
+                  kernel="chunked", microbatches=1, quantize="off"):
+    """Returns (lower_fn, meta). lower_fn() -> jax.stages.Lowered.
+
+    kernel="chunked" lowers the flash-equivalent jnp attention (same memory/
+    collective profile as the Pallas kernel); "ref" is the naive einsum
+    (kept for the §Perf naive→flash iteration record)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    check_applicable(cfg, shape)
+    cfg = with_overrides(cfg, remat=remat)
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    rules = shd.make_rules(mesh)
+    from repro.models.params import set_fsdp_axes
+    set_fsdp_axes(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
+    q = quantize if (quantize != "off" and shape.kind != "train") else False
+    if q == "int4":
+        # gather-free serving: int4 fits TP-only => params replicated over
+        # the DP axes, zero per-token FSDP gathers (EXPERIMENTS.md §Perf)
+        rules = dict(rules, embed=None)
+    policy = BackbonePolicy(cfg, tp=tp, kernel=kernel, quantize=q)
+    tcfg = TrainConfig(optimizer_state_dtype=opt_dtype)
+
+    if shape.kind == "train":
+        state = shd.abstract_train_state(policy, opt_dtype)
+        state_sh = shd.named(mesh, shd.train_state_pspecs(policy, rules))
+        batch = abstract_batch(cfg, shape.global_batch, shape.seq_len)
+        batch_sh = shd.named(mesh, {
+            k: P(*([rules["batch"]] + [None] * (len(v.shape) - 1)))
+            for k, v in batch.items()})
+        step = make_lm_train_step(policy, tcfg, loss_chunk=loss_chunk,
+                                   num_microbatches=microbatches)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))   # reuse state buffers in place
+        args = (state, batch)
+
+    elif shape.kind == "prefill":
+        params = policy.abstract()
+        params_sh = shd.named(mesh, policy.pspecs(rules))
+        P_pref = cfg.frontend_prefix if cfg.frontend else 0
+        inputs = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len - P_pref), jnp.int32)}
+        if P_pref:
+            inputs["prefix"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, P_pref, cfg.d_model), jnp.bfloat16)
+        in_sh = {k: NamedSharding(mesh, P(rules["batch"],
+                                          *([None] * (len(v.shape) - 1))))
+                 for k, v in inputs.items()}
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        pf = actor.make_prefill_step(policy, max_len=shape.seq_len)
+        fn = jax.jit(pf, in_shardings=(params_sh, in_sh, None))
+        args = (params, inputs, key)
+
+    else:  # decode
+        context_parallel = (shape.name == "long_500k")
+        params = policy.abstract()
+        params_sh = shd.named(mesh, policy.pspecs(rules))
+        caches = shd.abstract_caches(cfg, tp, shape.global_batch,
+                                     shape.seq_len)
+        caches_sh = shd.named(mesh, shd.cache_pspecs(
+            cfg, rules, context_parallel=context_parallel))
+        tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_sh = NamedSharding(mesh, P(None if context_parallel
+                                       else rules["batch"], None))
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        sv = actor.make_serve_step(policy, context_parallel=context_parallel)
+        fn = jax.jit(sv, in_shardings=(params_sh, tok_sh, caches_sh, None),
+                     out_shardings=(None, None, caches_sh),
+                     donate_argnums=(2,))   # in-place KV/SSM cache update
+        args = (params, tokens, caches, key)
+
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "mesh": "x".join(map(str, mesh.devices.shape)),
+            "model_flops": model_flops(get_config(arch), shape)}
+    return (lambda: fn.lower(*args)), meta
+
+
+def roofline(meta, lowered, compiled, chips: int) -> dict:
+    """Three roofline terms from the per-device SPMD HLO, with while-loop
+    bodies multiplied by their trip counts (hlo_analysis; XLA's own
+    cost_analysis undercounts scans — kept as 'xla_raw' for reference)."""
+    from repro.launch import hlo_analysis as H
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    a = H.analyze(compiled.as_text(), chips)
+    # per-device numbers; globals = ×chips
+    hlo_flops = float(a["flops"]) * chips
+    hlo_bytes = float(a["bytes"]) * chips
+    coll_bytes = float(a["collective_bytes"]) * chips
+    mem = compiled.memory_analysis()
+    out = dict(meta)
+    out.update({
+        "hlo_flops": hlo_flops,
+        "hlo_bytes": hlo_bytes,
+        "collective_bytes": coll_bytes,
+        "collectives": {k: v * chips for k, v in a["collectives"].items()},
+        "t_compute_s": hlo_flops / (chips * PEAK_FLOPS),
+        "t_memory_s": hlo_bytes / (chips * HBM_BW),
+        "t_collective_s": coll_bytes / (chips * ICI_BW),
+        "xla_raw": {"flops": float(cost.get("flops", 0.0)),
+                    "bytes": float(cost.get("bytes accessed", 0.0))},
+        "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "useful_flops_ratio": (meta["model_flops"] / hlo_flops
+                               if hlo_flops else None),
+    })
+    terms = {"compute": out["t_compute_s"], "memory": out["t_memory_s"],
+             "collective": out["t_collective_s"]}
+    out["bottleneck"] = max(terms, key=terms.get)
+    out["roofline_fraction"] = (
+        meta["model_flops"] / (chips * PEAK_FLOPS) / max(terms.values())
+        if max(terms.values()) > 0 else None)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, **kw) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(mesh.devices.size)
+    try:
+        lower_fn, meta = build_program(arch, shape_name, mesh, **kw)
+    except ShapeNotApplicable as e:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "x".join(map(str, mesh.devices.shape)),
+                "status": "skipped", "reason": str(e)}
+    t0 = time.time()
+    with mesh:
+        lowered = lower_fn()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    out = roofline(meta, lowered, compiled, chips)
+    out.update({"status": "ok", "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1)})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--opt-dtype", default="bfloat16")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--loss-chunk", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--quantize", default="off",
+                    choices=["off", "int8", "int4"],
+                    help="quantized weights for prefill/decode cells")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                r = run_cell(a, s, mp, opt_dtype=args.opt_dtype,
+                             remat=args.remat, loss_chunk=args.loss_chunk,
+                             microbatches=args.microbatches,
+                             quantize=args.quantize)
+                line = {k: r.get(k) for k in
+                        ("arch", "shape", "mesh", "status", "bottleneck",
+                         "t_compute_s", "t_memory_s", "t_collective_s",
+                         "roofline_fraction", "compile_s")}
+                print(json.dumps(line), flush=True)
+                results.append(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

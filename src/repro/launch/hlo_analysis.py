@@ -1,0 +1,438 @@
+"""Trip-count-aware cost analysis of post-optimization HLO.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE and reports
+per-device numbers (both verified empirically — EXPERIMENTS.md §Roofline
+notes). A layer-scanned transformer is therefore undercounted ~n_layers-fold.
+This module re-derives the three roofline terms from the HLO text:
+
+  * FLOPs — every ``dot`` (2·(result elements)·(contraction size)),
+    recursing into fusions/calls, multiplying while bodies by the trip
+    count read from the loop condition's comparison constant.
+  * bytes — HBM traffic model: Σ (operand + result bytes) over top-level
+    compute/data ops; fusion internals are not double counted (a fusion is
+    one read-operands/write-result unit, matching how the TPU memory system
+    sees it).
+  * collective bytes — per collective with ring-transfer factors from the
+    actual group size in replica_groups.
+
+All numbers are per-device (the SPMD module is per-device).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "bf16": 2,
+               "f16": 2, "s16": 2, "u16": 2, "f32": 4, "s32": 4, "u32": 4,
+               "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+               "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COMP_HEADER = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*{\s*$")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_INST = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(?:\(([^=]*?)\)|(\w+)\[([\d,]*)\]\S*)\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_SCALAR_INST = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\w+)\[\]\s+([\w\-]+)\((.*?)\)(.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALLS = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                    r"{?%?([\w\.\-, %]+)}?")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES = {"parameter", "get-tuple-element", "tuple", "constant",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "while", "conditional", "call", "compare", "add"}
+
+
+def _nbytes(dtype, dims) -> float:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class Inst:
+    name: str
+    dtype: Optional[str]          # None for tuple-shaped
+    dims: Tuple[int, ...]
+    tuple_shapes: List[Tuple[str, Tuple[int, ...]]]
+    op: str
+    raw_args: str
+    operands: List[str]
+    attrs: str
+
+    @property
+    def result_bytes(self) -> float:
+        if self.dtype is not None:
+            return _nbytes(self.dtype, self.dims)
+        return sum(_nbytes(dt, dims) for dt, dims in self.tuple_shapes)
+
+
+@dataclass
+class Computation:
+    name: str
+    insts: Dict[str, Inst] = field(default_factory=dict)
+    root: Optional[str] = None
+
+
+@dataclass
+class Module:
+    comps: Dict[str, Computation]
+    entry: str
+
+
+def parse(text: str) -> Module:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = re.sub(r"/\*.*?\*/", "", line).rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(s.strip())
+            if m:
+                cur = Computation(m.group(2))
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if s.strip().startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INST.match(s)
+        if not m:
+            continue
+        name, tup, dtype, dims, op, raw_args, attrs = m.groups()
+        if s.lstrip().startswith("ROOT"):
+            cur.root = name
+        tuple_shapes = ([(d, tuple(int(x) for x in sh.split(",") if x))
+                         for d, sh in _SHAPE.findall(tup)] if tup else [])
+        cur.insts[name] = Inst(
+            name=name, dtype=dtype,
+            dims=tuple(int(x) for x in dims.split(",") if x) if dims else (),
+            tuple_shapes=tuple_shapes, op=op, raw_args=raw_args,
+            operands=_OPERAND.findall(raw_args), attrs=attrs)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return Module(comps, entry)
+
+
+def _dot_flops(inst: Inst, comp: Computation) -> float:
+    out = 1
+    for d in inst.dims:
+        out *= d
+    m = re.search(r"lhs_contracting_dims={([\d,]*)}", inst.attrs)
+    k = 1
+    # operand shapes may be inline in raw_args or found by name
+    lhs_name = inst.operands[0] if inst.operands else None
+    lhs = comp.insts.get(lhs_name)
+    lhs_dims = lhs.dims if (lhs and lhs.dtype) else None
+    if lhs_dims is None:
+        ms = _SHAPE.search(inst.raw_args)
+        if ms:
+            lhs_dims = tuple(int(x) for x in ms.group(2).split(",") if x)
+    if m and lhs_dims:
+        for ci in (int(x) for x in m.group(1).split(",") if x):
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+    return 2.0 * out * k
+
+
+def _called(inst: Inst) -> List[str]:
+    out = []
+    for m in _CALLS.finditer(inst.attrs):
+        for name in m.group(1).split(","):
+            out.append(name.strip().lstrip("%"))
+    return out
+
+
+def _trip_count(mod: Module, cond_name: str) -> int:
+    """Max integer constant reachable from the loop condition."""
+    vals, seen = [], set()
+
+    def walk(cname):
+        if cname in seen or cname not in mod.comps:
+            return
+        seen.add(cname)
+        for inst in mod.comps[cname].insts.values():
+            if inst.op == "constant" and inst.dtype in ("s32", "u32", "s64",
+                                                        "u64"):
+                mm = re.match(r"(\d+)", inst.raw_args.strip())
+                if mm:
+                    vals.append(int(mm.group(1)))
+            for c in _called(inst):
+                walk(c)
+
+    walk(cond_name)
+    return max(vals) if vals else 1
+
+
+def _group_size(attrs: str, total_devices: int) -> int:
+    m = _GROUPS.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_OLD.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def ring_factor(op: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (g - 1) / g
+    return 1.0   # collective-permute
+
+
+class Analysis(dict):
+    pass
+
+
+_FUSE_AWAY = {"parameter", "convert", "bitcast", "constant", "broadcast",
+              "copy", "reshape", "transpose"}
+
+
+def _convert_only(comp: Computation) -> bool:
+    """Fusions that only convert/relayout: zero HBM traffic on the TPU
+    target (they fuse into their producer/consumer)."""
+    return all(i.op in _FUSE_AWAY for i in comp.insts.values())
+
+
+def _adj(nbytes_f32_portion, total, half_f32: bool):
+    return total - nbytes_f32_portion / 2.0 if half_f32 else total
+
+
+def _inst_bytes(inst: Inst, half_f32: bool) -> float:
+    b = inst.result_bytes
+    if not half_f32:
+        return b
+    if inst.dtype == "f32":
+        return b / 2.0
+    if inst.dtype is None:
+        f32b = sum(_nbytes(dt, dims) for dt, dims in inst.tuple_shapes
+                   if dt == "f32")
+        return b - f32b / 2.0
+    return b
+
+
+def trip_multipliers(mod: Module) -> Dict[str, int]:
+    """computation name -> product of enclosing while trip counts."""
+    trips: Dict[str, int] = {}
+
+    def walk(cname, mult):
+        comp = mod.comps.get(cname)
+        if comp is None:
+            return
+        for inst in comp.insts.values():
+            if inst.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", inst.attrs)
+                mt = _TRIP.search(inst.attrs)
+                t = int(mt.group(1)) if mt else 1
+                if mb:
+                    trips[mb.group(1)] = mult * t
+                    walk(mb.group(1), mult * t)
+            else:
+                for c in _called(inst):
+                    walk(c, mult)
+
+    walk(mod.entry, 1)
+    return trips
+
+
+def explain(text: str, total_devices: int = 1, topn: int = 15,
+            what: str = "bytes"):
+    """Top-N per-instruction contributions to the bytes or collective term,
+    trip-count weighted — the dry-run 'profiler' used by §Perf iterations."""
+    from repro.launch import hlo_analysis as H
+    mod = parse(text)
+    trips = trip_multipliers(mod)
+    a = analyze(text, total_devices)
+    items = []
+    for cname, comp in mod.comps.items():
+        mult = trips.get(cname, 1 if cname == mod.entry else 0)
+        if mult == 0:
+            continue
+        for inst in comp.insts.values():
+            if what == "collective" and inst.op not in COLLECTIVES:
+                continue
+            if inst.op in _SKIP_BYTES or "KERNEL_" in inst.attrs:
+                continue
+            b = inst.result_bytes + sum(
+                comp.insts[o].result_bytes for o in inst.operands
+                if o in comp.insts)
+            mm = re.search(r'op_name="([^"]*)"', inst.attrs)
+            items.append((b * mult, inst.op, mult,
+                          str(inst.dims or inst.tuple_shapes)[:48],
+                          (mm.group(1) if mm else "?")[-80:]))
+    items.sort(reverse=True)
+    return a, items[:topn]
+
+
+
+def _marked(inst: Inst) -> bool:
+    return "KERNEL_" in inst.attrs
+
+
+def _io_bytes(inst: Inst, comp: Computation, half_f32: bool,
+              forced_marked: bool = None) -> float:
+    """Traffic for one instruction. Unmarked: operands + result. Marked
+    (inside a Pallas-kernel stand-in): only *boundary* reads — operands
+    produced by unmarked instructions (e.g. the int4 weight feeding a fused
+    quantized matmul) — internal tiles are VMEM-resident on the TPU kernel."""
+    if _marked(inst) if forced_marked is None else forced_marked:
+        return sum(_inst_bytes(comp.insts[o], half_f32)
+                   for o in inst.operands
+                   if o in comp.insts and not _marked(comp.insts[o])
+                   and comp.insts[o].op not in ("constant", "iota"))
+    return _inst_bytes(inst, half_f32) + sum(
+        _inst_bytes(comp.insts[o], half_f32) for o in inst.operands
+        if o in comp.insts)
+
+
+def analyze(text: str, total_devices: int = 1,
+            bf16_dot_legalization: bool = True) -> Analysis:
+    """``bf16_dot_legalization``: the CPU backend legalizes every bf16 dot to
+    an f32 dot with converted operands, which drags the activation/gradient
+    partial-sum collectives inside the layer scan to f32. The TPU target
+    keeps them bf16 (native MXU bf16 dots), so f32 collectives inside loop
+    bodies are counted at bf16 width. Deliberate f32 collectives outside the
+    scan (optimizer global norms, loss reductions) are unaffected."""
+    mod = parse(text)
+    memo: Dict[tuple, tuple] = {}
+
+    def cost(cname: str, in_loop: bool = False) -> tuple:
+        """(flops, bytes, coll_bytes_weighted, coll_breakdown)."""
+        if (cname, in_loop) in memo:
+            return memo[(cname, in_loop)]
+        comp = mod.comps.get(cname)
+        if comp is None:
+            return (0.0, 0.0, 0.0, {})
+        fl = by = cb = 0.0
+        breakdown: Dict[str, float] = {}
+        for inst in comp.insts.values():
+            if inst.op == "dot":
+                fl += _dot_flops(inst, comp)
+                by += _io_bytes(inst, comp, bf16_dot_legalization and in_loop)
+            elif inst.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", inst.attrs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", inst.attrs)
+                body = mb.group(1) if mb else None
+                condc = mc.group(1) if mc else None
+                mt = _TRIP.search(inst.attrs)
+                if mt:  # exact: XLA annotates known_trip_count
+                    trip = int(mt.group(1))
+                else:
+                    trip = _trip_count(mod, condc) if condc else 1
+                bfl, bby, bcb, bbd = cost(body, True) if body else (0, 0, 0, {})
+                fl += trip * bfl
+                by += trip * bby
+                cb += trip * bcb
+                for k, v in bbd.items():
+                    breakdown[k] = breakdown.get(k, 0.0) + trip * v
+            elif inst.op in ("fusion", "call", "conditional", "custom-call"):
+                called = _called(inst)
+                for c in called:
+                    cfl, _cby, ccb, cbd = cost(c, in_loop)
+                    fl += cfl       # count dots inside fused computations
+                    cb += ccb
+                    for k, v in cbd.items():
+                        breakdown[k] = breakdown.get(k, 0.0) + v
+                # fusions sometimes drop op_name metadata; recover the
+                # kernel marker from the fused computation's instructions
+                marked = "KERNEL_" in inst.attrs or any(
+                    "KERNEL_" in ci.attrs
+                    for c in called if c in mod.comps
+                    for ci in mod.comps[c].insts.values())
+                if marked:
+                    # boundary reads of a kernel-marked fusion: when the
+                    # fused computation dynamic-slices an operand (a scanned
+                    # weight stack), the true read is the SLICE, not the
+                    # stack — map fusion operands to inner parameters
+                    h = bf16_dot_legalization and in_loop
+                    for oi, o in enumerate(inst.operands):
+                        src = comp.insts.get(o)
+                        if src is None or _marked(src) or \
+                                src.op in ("constant", "iota"):
+                            continue
+                        sliced = None
+                        for c in called:
+                            cc = mod.comps.get(c)
+                            if cc is None:
+                                continue
+                            pname = None
+                            for ci in cc.insts.values():
+                                if ci.op == "parameter" and \
+                                        ci.raw_args.strip() == str(oi):
+                                    pname = ci.name
+                            if pname is None:
+                                continue
+                            for ci in cc.insts.values():
+                                if ci.op == "dynamic-slice" and \
+                                        pname in ci.operands:
+                                    sliced = ci.result_bytes
+                        by += (sliced if sliced is not None
+                               else _inst_bytes(src, h))
+                    continue
+                # fused in-place dynamic-update-slice (donated buffers):
+                # traffic = read-modify-write of the update region only
+                dus = None
+                for c in called:
+                    cc = mod.comps.get(c)
+                    if cc is None:
+                        continue
+                    for ci in cc.insts.values():
+                        if ci.op == "dynamic-update-slice" and \
+                                ci.result_bytes >= 0.5 * inst.result_bytes:
+                            upd = (cc.insts.get(ci.operands[1])
+                                   if len(ci.operands) > 1 else None)
+                            if upd is not None:
+                                dus = upd.result_bytes
+                if dus is not None:
+                    by += 2 * dus
+                elif any(c in mod.comps and _convert_only(mod.comps[c])
+                         for c in called):
+                    pass   # dtype/layout-only fusion: fuses away on TPU
+                else:
+                    h = bf16_dot_legalization and in_loop
+                    by += _inst_bytes(inst, h) + sum(
+                        _inst_bytes(comp.insts[o], h) for o in inst.operands
+                        if o in comp.insts)
+            elif inst.op in COLLECTIVES:
+                g = _group_size(inst.attrs, total_devices)
+                rb = inst.result_bytes
+                if bf16_dot_legalization and in_loop:
+                    f32b = sum(_nbytes(dt, dims) for dt, dims in
+                               inst.tuple_shapes if dt == "f32") \
+                        if inst.dtype is None else \
+                        (rb if inst.dtype == "f32" else 0.0)
+                    rb = rb - f32b / 2.0        # f32 -> bf16 width
+                w = rb * ring_factor(inst.op, g)
+                cb += w
+                breakdown[inst.op] = breakdown.get(inst.op, 0.0) + w
+                by += 2 * rb
+            elif inst.op == "dynamic-update-slice":
+                if "KERNEL_" in inst.attrs:
+                    continue
+                # in-place update (buffer donation aliases input/output):
+                # traffic = read-modify-write of the updated region only
+                upd = (comp.insts.get(inst.operands[1])
+                       if len(inst.operands) > 1 else None)
+                by += 2 * (upd.result_bytes if upd is not None
+                           else inst.result_bytes)
+            elif inst.op not in _SKIP_BYTES:
+                by += _io_bytes(inst, comp, bf16_dot_legalization and in_loop)
+        memo[(cname, in_loop)] = (fl, by, cb, breakdown)
+        return memo[(cname, in_loop)]
+
+    fl, by, cb, bd = cost(mod.entry, False)
+    return Analysis(flops=fl, bytes=by, collective_bytes=cb,
+                    collectives=bd)

@@ -1,0 +1,121 @@
+"""Training launcher: Ocean suite PPO or LM-backbone PPO, with fault
+tolerance, checkpoint/restart, elastic re-mesh, and straggler monitoring.
+
+  # the paper's coffee-break sanity suite
+  PYTHONPATH=src python -m repro.launch.train --ocean all
+
+  # LM-backbone PPO on a (possibly fake-device) mesh
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --batch 8 --seq 256 --steps 20 --mesh 1x1
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ocean", default=None,
+                    help="ocean env name or 'all'")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config for --arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--total-env-steps", type=int, default=200_000)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mesh", default="1x1",
+                    help="DxM (e.g. 16x16); device count must match")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force host platform device count (dry runs)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   f" --xla_force_host_platform_device_count="
+                                   f"{args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+
+    if args.ocean:
+        from repro.envs.ocean import OCEAN
+        from repro.rl.trainer import Trainer
+        from repro.configs.base import TrainConfig
+        names = list(OCEAN) if args.ocean == "all" else [args.ocean]
+        tcfg = TrainConfig(num_envs=64, unroll_length=64, update_epochs=4,
+                           num_minibatches=4, learning_rate=1e-3, gamma=0.95,
+                           checkpoint_dir=args.ckpt_dir)
+        for name in names:
+            recurrent = (name == "memory")
+            tr = Trainer(OCEAN[name](), tcfg, hidden=64, recurrent=recurrent,
+                         seed=args.seed)
+            print(f"=== {name} (recurrent={recurrent}) ===")
+            m = tr.train(args.total_env_steps, log_every=10,
+                         target_score=0.9)
+            status = "SOLVED" if m["score"] >= 0.9 else "unsolved"
+            print(f"  -> {status} score={m['score']:.3f} "
+                  f"steps={m['env_steps']} sps={m['sps']:.0f}")
+        return
+
+    # ---- LM backbone PPO ------------------------------------------------------
+    from repro.configs import get_config, get_smoke_config
+    from repro.configs.base import TrainConfig
+    from repro.data.buffer import random_batch
+    from repro.distributed import sharding as shd
+    from repro.distributed.fault import ResilientLoop
+    from repro.launch.mesh import make_mesh
+    from repro.models.params import set_fsdp_axes
+    from repro.models.policy import BackbonePolicy
+    from repro.rl.learner import init_train_state, make_lm_train_step
+
+    shape = tuple(int(x) for x in args.mesh.split("x"))
+    axes = ("data", "model")[:len(shape)] if len(shape) == 2 \
+        else ("pod", "data", "model")
+    mesh = make_mesh(shape, axes)
+    set_fsdp_axes(tuple(a for a in ("pod", "data") if a in axes))
+    rules = shd.make_rules(mesh)
+    tp = dict(zip(axes, shape)).get("model", 1)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    policy = BackbonePolicy(cfg, tp=tp, kernel="auto")
+    tcfg = TrainConfig(checkpoint_dir=args.ckpt_dir)
+    key = jax.random.PRNGKey(args.seed)
+
+    with mesh:
+        state = init_train_state(policy.init(key),
+                                 jnp.dtype(tcfg.optimizer_state_dtype))
+        state_sh = shd.named(mesh, shd.train_state_pspecs(policy, rules))
+        step = jax.jit(make_lm_train_step(policy, tcfg,
+                                          loss_chunk=min(256, args.seq)),
+                       out_shardings=(state_sh, None))
+        loop = ResilientLoop(step, args.ckpt_dir,
+                             save_every=args.save_every,
+                             shardings=state_sh)
+        if args.resume:
+            state, start = loop.resume_or_init(state)
+            loop.steps_done = start
+            print(f"resumed at step {start}")
+
+        def batches():
+            for i in range(args.steps - loop.steps_done):
+                yield random_batch(cfg, args.batch, args.seq,
+                                   jax.random.fold_in(key, 1000 + i))
+
+        def on_metrics(i, m):
+            if i % 5 == 0 or i == 1:
+                print(f"step {i:5d} loss {float(m['loss']):+.4f} "
+                      f"kl {float(m['approx_kl']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.2f} "
+                      f"median_step {loop.monitor.median*1e3:.0f}ms")
+
+        state = loop.run(state, batches(), on_metrics)
+    print(f"done: {loop.steps_done} steps, {loop.recoveries} recoveries, "
+          f"{loop.monitor.flagged} straggler flags")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models import params, layers, attention, moe, ssm, transformer, \
+    policy, frontends
+from repro.models.policy import OceanPolicy, BackbonePolicy

@@ -1,0 +1,137 @@
+"""Grouped-query attention with KV cache, rope, qk_norm, TP padding.
+
+Head counts are padded to the tensor-parallel size (DESIGN.md §3): padded
+query heads are zero-initialized and their outputs are annihilated by the
+zero rows of ``wo``; KV heads are replicated so every shard owns whole heads.
+
+Three entry points:
+  * ``attend_full``  — training / prefill over a whole sequence (flash kernel
+    on TPU, jnp reference elsewhere).
+  * ``attend_decode`` — one new token against a KV cache (context-parallel
+    capable: for long_500k the cache's sequence dim is sharded over "data"
+    and GSPMD all-reduces the softmax statistics).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, constrain, use_weight, weight
+from repro.models.layers import apply_rope, rms_norm, rms_norm_spec
+
+from repro.kernels import ops as kops
+
+
+def attention_spec(cfg: ModelConfig, tp: int, stack: tuple = ()):
+    H, K, hd, d = (cfg.padded_heads(tp), cfg.padded_kv_heads(tp),
+                   cfg.head_dim, cfg.d_model)
+    sizes = tuple(s for s, _ in stack)
+    names = tuple(n for _, n in stack)
+    spec = {
+        "wq": ParamSpec(sizes + (d, H, hd), names + ("embed", "heads", "null"),
+                        fan_in=d),
+        "wk": ParamSpec(sizes + (d, K, hd), names + ("embed", "kv_heads", "null"),
+                        fan_in=d),
+        "wv": ParamSpec(sizes + (d, K, hd), names + ("embed", "kv_heads", "null"),
+                        fan_in=d),
+        "wo": ParamSpec(sizes + (H, hd, d), names + ("heads", "null", "embed"),
+                        fan_in=H * hd),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = ParamSpec(sizes + (hd,), names + ("null",),
+                                   init="zeros", dtype=jnp.float32)
+        spec["k_norm"] = ParamSpec(sizes + (hd,), names + ("null",),
+                                   init="zeros", dtype=jnp.float32)
+    return spec
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, K, hd)
+    v: jax.Array          # (B, S_max, K, hd)
+    length: jax.Array     # () int32 — filled prefix
+
+
+def init_cache(cfg: ModelConfig, tp: int, batch: int, max_len: int,
+               dtype=None, stack_dims: tuple = ()) -> KVCache:
+    K, hd = cfg.padded_kv_heads(tp), cfg.head_dim
+    shape = stack_dims + (batch, max_len, K, hd)
+    dtype = dtype or cfg.dtype
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros(stack_dims, jnp.int32))
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    dt = cfg.dtype
+    wq = weight(params, "wq", ("embed", "heads", "null"))
+    wk = weight(params, "wk", ("embed", "kv_heads", "null"))
+    wv = weight(params, "wv", ("embed", "kv_heads", "null"))
+    q = jnp.einsum("btd,dhk->bthk", x, wq.astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, wk.astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, wv.astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attend_full(params, x, cfg: ModelConfig, tp: int,
+                positions=None, kernel: str = "auto"):
+    """Causal self-attention over a full sequence. x: (B, T, d)."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    q = constrain(q, "batch", "null", "heads", "null")
+    k = constrain(k, "batch", "null", "kv_heads", "null")
+    out = kops.flash_attention(q, k, v, causal=True, mode=kernel)
+    out = constrain(out, "batch", "null", "heads", "null")
+    wo = weight(params, "wo", ("heads", "null", "embed"))
+    return jnp.einsum("bthk,hkd->btd", out, wo.astype(cfg.dtype))
+
+
+def attend_prefill(params, x, cfg: ModelConfig, tp: int, cache: KVCache,
+                   kernel: str = "auto"):
+    """Full-sequence attention that also fills the KV cache."""
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    out = kops.flash_attention(q, k, v, causal=True, mode=kernel)
+    newk = jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
+    newv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
+    cache = KVCache(newk, newv, jnp.asarray(T, jnp.int32))
+    wo = weight(params, "wo", ("heads", "null", "embed"))
+    y = jnp.einsum("bthk,hkd->btd", out, wo.astype(cfg.dtype))
+    return y, cache
+
+
+def attend_decode(params, x, cfg: ModelConfig, tp: int, cache: KVCache,
+                  context_parallel: bool = False):
+    """One-token decode. x: (B, 1, d); cache holds ``cache.length`` tokens.
+
+    The cache is updated in place at position ``length``. When
+    ``context_parallel`` (long_500k), the cache seq dim is sharded over
+    "data"; the softmax reduction over the sharded axis becomes a GSPMD
+    all-reduce of (num, denom) — flash-decode's two-pass trick, done by the
+    partitioner.
+    """
+    B, one, d = x.shape
+    assert one == 1
+    pos = jnp.broadcast_to(cache.length[None], (B, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, pos)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, cache.length, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, cache.length, axis=1)
+    if context_parallel:
+        k = constrain(k, "null", "ctx", "kv_heads", "null")   # seq -> data (B=1)
+        v = constrain(v, "null", "ctx", "kv_heads", "null")
+    # flash-decode kernel (Pallas on TPU; scoped jnp oracle elsewhere)
+    out = kops.flash_decode(q[:, 0], k, v, cache.length)      # (B, H, hd)
+    out = out[:, None].astype(cfg.dtype)                      # (B, 1, H, hd)
+    wo = weight(params, "wo", ("heads", "null", "embed"))
+    y = jnp.einsum("bthk,hkd->btd", out, wo.astype(cfg.dtype))
+    return y, KVCache(k, v, cache.length + 1)

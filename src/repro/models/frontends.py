@@ -1,0 +1,16 @@
+"""Modality frontend STUBS (per assignment: [vlm]/[audio] specify the
+transformer backbone only; input_specs() provides precomputed patch/frame
+embeddings). These helpers fabricate such prefixes for smoke tests/examples."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def stub_prefix(cfg: ModelConfig, key, batch: int):
+    """Precomputed frame/patch embeddings: (B, P, d_model)."""
+    assert cfg.frontend in ("vlm", "audio")
+    return jax.random.normal(key, (batch, cfg.frontend_prefix, cfg.d_model),
+                             jnp.float32).astype(cfg.dtype) * 0.02

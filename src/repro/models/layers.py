@@ -1,0 +1,109 @@
+"""Shared layers: norms, rotary embeddings, embeddings, gated MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, constrain, use_weight, weight
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    # f32 only for the (…,1) variance reduction; the wide elementwise math
+    # stays in x.dtype so residual-chain cotangents (which ride the TP
+    # all-reduces) stay bf16 — 2x on the dominant collective term
+    # (EXPERIMENTS.md §Perf iteration 2).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    w = 1.0 + scale.astype(jnp.float32)
+    return x * inv.astype(x.dtype) * w.astype(x.dtype)
+
+
+def rms_norm_spec(dim: int, axes=("embed",)) -> ParamSpec:
+    # stored as (scale - 1) so zero-init == identity
+    return ParamSpec((dim,), axes, init="zeros", dtype=jnp.float32)
+
+
+# -- rotary -------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, hd); positions: (..., T) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,T,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (...,T,1,hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- embedding ----------------------------------------------------------------
+
+def embedding_spec(cfg: ModelConfig):
+    v = cfg.padded_vocab()
+    return {
+        "embed": ParamSpec((v, cfg.d_model), ("vocab", "embed"),
+                           fan_in=cfg.d_model),
+    }
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    w = weight(params, "embed", ("vocab", "embed"))
+    x = jnp.take(w, tokens, axis=0).astype(cfg.dtype)
+    return x * jnp.asarray(jnp.sqrt(float(cfg.d_model)), cfg.dtype)
+
+
+def unembed_spec(cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    v = cfg.padded_vocab()
+    return {"unembed": ParamSpec((cfg.d_model, v), ("embed", "vocab"),
+                                 fan_in=cfg.d_model)}
+
+
+def unembed(params, embed_params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = weight(embed_params, "embed", ("vocab", "embed")).T
+    else:
+        w = weight(params, "unembed", ("embed", "vocab"))
+    logits = jnp.einsum("...d,dv->...v", x, w.astype(cfg.dtype))
+    logits = constrain(logits, "batch", "null", "vocab") \
+        if logits.ndim == 3 else logits
+    return logits.astype(jnp.float32)
+
+
+# -- gated MLP (SwiGLU / GeGLU) ------------------------------------------------
+
+def make_mlp_spec(cfg: ModelConfig, d_ff: int = 0, stack: tuple = ()):
+    """``stack``: leading (size, axis_name) dims (e.g. ((n_periods,'periods'),))."""
+    d_ff = d_ff or cfg.d_ff
+    sizes = tuple(s for s, _ in stack)
+    names = tuple(n for _, n in stack)
+    return {
+        "wi": ParamSpec(sizes + (cfg.d_model, 2 * d_ff),
+                        names + ("embed", "mlp"), fan_in=cfg.d_model),
+        "wo": ParamSpec(sizes + (d_ff, cfg.d_model),
+                        names + ("mlp", "embed"), fan_in=d_ff),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    qscope = (jax.named_scope("KERNEL_qmm") if "wi_scale" in params
+              else jax.named_scope("mlp"))
+    wi = weight(params, "wi", ("embed", "mlp")).astype(cfg.dtype)
+    wo = weight(params, "wo", ("mlp", "embed")).astype(cfg.dtype)
+    with qscope:
+        h = jnp.einsum("...d,df->...f", x, wi)
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate) if cfg.mlp_activation == "silu" \
+        else jax.nn.gelu(gate, approximate=True)
+    h = act * up
+    h = constrain(h, "batch", "null", "mlp") if h.ndim == 3 else h
+    with qscope:
+        return jnp.einsum("...f,fd->...d", h, wo)

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts with expert parallelism.
+
+Baseline path ("gather"): GShard-style capacity dispatch, but index-based —
+tokens are scattered into per-expert capacity slots by integer index instead
+of one-hot einsums, keeping memory at O(tokens × d_model) rather than
+O(tokens × experts × capacity). Experts are sharded over the "model" mesh
+axis (EP); groups (one per sequence) over "data"; GSPMD inserts the
+dispatch/return collectives.
+
+The router runs in float32 (numerics) and its auxiliary load-balancing loss
+is returned for the training objective (Switch/GShard aux loss).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, constrain, use_weight, weight
+
+
+def moe_spec(cfg: ModelConfig, stack: tuple = ()):
+    sizes = tuple(s for s, _ in stack)
+    names = tuple(n for _, n in stack)
+    d, f, E = cfg.d_model, cfg.expert_d_ff, cfg.num_experts
+    return {
+        "router": ParamSpec(sizes + (d, E), names + ("embed", "expert"),
+                            fan_in=d, dtype=jnp.float32),
+        "wi": ParamSpec(sizes + (E, d, 2 * f),
+                        names + ("expert", "embed", "mlp"), fan_in=d),
+        "wo": ParamSpec(sizes + (E, f, d),
+                        names + ("expert", "mlp", "embed"), fan_in=f),
+    }
+
+
+def capacity(cfg: ModelConfig, group_size: int) -> int:
+    c = int(math.ceil(group_size * cfg.top_k * cfg.capacity_factor
+                      / cfg.num_experts))
+    return max(8, ((c + 3) // 4) * 4)   # align a little for layout
+
+
+def moe_apply(params, x, cfg: ModelConfig, deterministic: bool = True):
+    """x: (B, T, d) — groups are sequences (G=B). Returns (y, aux_loss)."""
+    Bg, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    C = capacity(cfg, S)
+    dt = cfg.dtype
+
+    # The router dot runs in x.dtype and upcasts AFTER: an f32 dot output
+    # makes dx f32, and cotangent-dtype promotion then turns the WHOLE
+    # backward residual stream f32 for every layer — 2x on the dominant
+    # all-reduce (measured; EXPERIMENTS.md §Perf iteration 2).
+    router = weight(params, "router", ("embed", "expert"))
+    logits = jnp.einsum("gsd,de->gse", x,
+                        router.astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G,S,E)
+    gate, eidx = jax.lax.top_k(probs, k)                         # (G,S,k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # Switch aux loss: fraction routed vs mean prob per expert
+    me = jnp.mean(probs, axis=(0, 1))                            # (E,)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(eidx[..., 0], E), axis=1)
+                  / S, axis=0)                                   # (E,)
+    aux = E * jnp.sum(me * ce)
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)            # (G,S,k,E)
+    flat = onehot.reshape(Bg, S * k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1                           # (G,S*k,E)
+    pos = jnp.take_along_axis(
+        pos, eidx.reshape(Bg, S * k, 1), axis=-1)[..., 0]        # (G,S*k)
+    pos = pos.reshape(Bg, S, k)
+    keep = pos < C
+    slot = jnp.where(keep, eidx * C + pos, E * C)                # (G,S,k)
+
+    # scatter tokens into capacity slots (extra row E*C swallows drops)
+    def scatter_one(xg, slotg):
+        buf = jnp.zeros((E * C + 1, d), dt)
+        idx = slotg.reshape(-1)                                  # (S*k,)
+        src = jnp.repeat(xg, k, axis=0)                          # (S*k, d)
+        return buf.at[idx].add(src.astype(dt))
+
+    ebuf = jax.vmap(scatter_one)(x.astype(dt), slot)             # (G,E*C+1,d)
+    ebuf = ebuf[:, :E * C].reshape(Bg, E, C, d)
+    ebuf = constrain(ebuf, "batch", "expert", "null", "null")
+
+    # expert FFN (SwiGLU) — EP: E sharded over "model". When quantized the
+    # dequant+dot pair lowers as one fused W4/W8 matmul (kernels/quant_matmul
+    # on TPU; KERNEL_qmm-scoped jnp stand-in for the dry-run).
+    import jax as _jax
+    qscope = (_jax.named_scope("KERNEL_qmm") if "wi_scale" in params
+              else _jax.named_scope("moe_ffn"))
+    wi = weight(params, "wi", ("expert", "embed", "mlp"))
+    with qscope:
+        h = jnp.einsum("gecd,edf->gecf", ebuf, wi.astype(dt))
+    g, u = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(g) if cfg.mlp_activation == "silu" \
+        else jax.nn.gelu(g, approximate=True)
+    wo = weight(params, "wo", ("expert", "mlp", "embed"))
+    with qscope:
+        y = jnp.einsum("gecf,efd->gecd", act * u, wo.astype(dt))
+    y = constrain(y, "batch", "expert", "null", "null")
+
+    # gather back: token t takes its k slots, weighted by gates
+    ypad = jnp.concatenate([y.reshape(Bg, E * C, d),
+                            jnp.zeros((Bg, 1, d), dt)], axis=1)
+    def gather_one(yg, slotg, gateg):
+        out = yg[slotg.reshape(-1)].reshape(S, k, d)
+        return jnp.sum(out * gateg[..., None].astype(dt), axis=1)
+    out = jax.vmap(gather_one)(ypad, slot, gate)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,275 @@
+"""Parameter system: a single source of truth for shapes, init, and sharding.
+
+Modules declare nested dicts of ``ParamSpec`` (shape + logical axis names +
+init). From one spec tree we derive:
+  * materialized params (``init_params``),
+  * abstract params for dry-runs (``abstract_params`` — ShapeDtypeStructs,
+    no allocation),
+  * mesh PartitionSpecs (``param_pspecs``) via logical→mesh axis rules.
+
+Logical axes used across the framework:
+  layers/periods — scan dim, never sharded
+  embed          — d_model;     FSDP/ZeRO axis ("data")
+  vocab/heads/kv_heads/mlp/expert/ssm_heads — tensor axis ("model")
+  null           — never sharded
+
+Rules map logical→mesh axes; a mesh axis is used at most once per param
+(first logical axis wins — e.g. expert weights (expert, embed, mlp) shard
+expert→model, embed→data, and mlp stays replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                     # logical axis names, len == len(shape)
+    init: str = "normal"            # normal | zeros | ones
+    fan_in: Optional[int] = None    # for "normal": std = 1/sqrt(fan_in)
+    dtype: Any = None               # None => use param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# default logical→mesh rules for the production mesh (data, model[, pod])
+DEFAULT_RULES = {
+    "embed": "data",        # FSDP / ZeRO-3
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "ssm_heads": "model",
+    "layers": None,
+    "periods": None,
+    "null": None,
+    # activation logical axes
+    "batch": "data",
+    "seq": None,
+    "embed_act": None,
+    "ctx": "data",          # context-parallel KV sequence dim (long_500k)
+}
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, spec_tree):
+    return jax.tree.map(fn, spec_tree, is_leaf=is_spec)
+
+
+def init_params(spec_tree, key, param_dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dtype = spec.dtype or param_dtype
+        if spec.init == "zeros":
+            x = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            x = jnp.ones(spec.shape, dtype)
+        else:
+            fan = spec.fan_in or (spec.shape[-2] if len(spec.shape) >= 2
+                                  else spec.shape[-1])
+            x = (jax.random.normal(k, spec.shape, jnp.float32)
+                 / jnp.sqrt(float(fan))).astype(dtype)
+        out.append(x)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(spec_tree, param_dtype=jnp.float32):
+    """ShapeDtypeStruct tree — the dry-run path (no allocation)."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or param_dtype),
+        spec_tree)
+
+
+def make_pspec(axes: tuple, rules: dict) -> P:
+    """Logical axes → PartitionSpec. Rule values may be a mesh axis name or a
+    tuple of names (e.g. FSDP over ("pod", "data")); each mesh axis is used
+    at most once per param."""
+    used, parts = set(), []
+    for a in axes:
+        m = rules.get(a)
+        if m is None:
+            parts.append(None)
+            continue
+        if isinstance(m, (tuple, list)):
+            avail = tuple(x for x in m if x not in used)
+            if not avail:
+                parts.append(None)
+                continue
+            used.update(avail)
+            parts.append(avail if len(avail) > 1 else avail[0])
+        elif m in used:
+            parts.append(None)
+        else:
+            parts.append(m)
+            used.add(m)
+    return P(*parts)
+
+
+def param_pspecs(spec_tree, rules: dict = None):
+    rules = DEFAULT_RULES if rules is None else rules
+    return tree_map_specs(lambda s: make_pspec(s.axes, rules), spec_tree)
+
+
+def param_count(spec_tree) -> int:
+    import numpy as np
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape, dtype=np.int64)) for s in leaves))
+
+
+# Weight layout at USE time: tensor axes stay sharded, the FSDP ("embed")
+# axis is gathered. Annotating every weight use with this makes GSPMD insert
+# the per-layer FSDP all-gather of the (small) weight instead of choosing to
+# gather the (huge) batch activations — the ZeRO-3 compute pattern.
+USE_RULES = {"vocab": "model", "heads": "model", "kv_heads": "model",
+             "mlp": "model", "expert": "model", "ssm_heads": "model"}
+
+# FSDP axes of the active mesh (set by the launcher; ("data",) or
+# ("pod", "data")). Used for the *storage/gradient* layout in use_weight's
+# backward rule.
+_FSDP_AXES = ("data",)
+
+
+def set_fsdp_axes(axes) -> None:
+    global _FSDP_AXES
+    _FSDP_AXES = tuple(axes)
+
+
+def _wsc(x, spec):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def use_weight(w, axes: tuple):
+    """Constrain a weight at its einsum use site.
+
+    Forward: FSDP axis gathered (compute layout). Backward: the weight
+    gradient is constrained to the *storage* layout (FSDP-sharded), which
+    makes GSPMD lower dW as local-partial + reduce-scatter instead of
+    all-gathering the batch activations (a ~300× collective-bytes difference
+    measured on qwen3 train_4k — EXPERIMENTS.md §Perf)."""
+    axes = tuple(axes)
+    use_spec = make_pspec(axes, USE_RULES)
+    storage_rules = dict(DEFAULT_RULES)
+    storage_rules["embed"] = _FSDP_AXES
+    storage_spec = make_pspec(axes, storage_rules)
+
+    @jax.custom_vjp
+    def f(w):
+        return _wsc(w, use_spec)
+
+    def fwd(w):
+        return _wsc(w, use_spec), None
+
+    def bwd(_, g):
+        return (_wsc(g, storage_spec),)
+
+    f.defvjp(fwd, bwd)
+    return f(w)
+
+
+def weight(params: dict, name: str, axes: tuple, dtype=None):
+    """Fetch a weight at its use site: FSDP-gather constraint + optional
+    int8 dequantization (serving: ``<name>_scale`` present ⇒ the int8 tensor
+    is gathered/read at 1 byte/elem, then dequantized per output channel —
+    halves the dominant collective+memory terms of weight-gathered decode,
+    EXPERIMENTS.md §Perf)."""
+    w = use_weight(params[name], axes)
+    scale = params.get(name + "_scale")
+    if scale is not None:
+        # barrier + post-dequant constraint pin the FSDP all-gather on the
+        # int8 value (1 byte/elem); otherwise XLA sinks the dequant below
+        # the gather and moves bf16/f32 over the wire
+        w = jax.lax.optimization_barrier(w)
+        dt = dtype or jnp.bfloat16
+        # the dequantized weight is never materialized on the TPU target —
+        # kernels/quant_matmul fuses dequant into the MXU feed; the scope
+        # tells the dry-run analyzer to treat it as VMEM-resident
+        with jax.named_scope("KERNEL_qmm"):
+            w = _wsc(w.astype(dt) * scale.astype(dt),
+                     make_pspec(tuple(axes), USE_RULES))
+    elif dtype is not None:
+        w = w.astype(dtype)
+    return w
+
+
+def quantize_spec(spec_tree, qdtype=jnp.int8):
+    """Transform a ParamSpec tree for int8/int4 serving: every >=2D matmul
+    weight becomes qdtype with a per-output-channel f32 scale."""
+    def walk(d):
+        if isinstance(d, ParamSpec):
+            return d
+        out = {}
+        for k, v in d.items():
+            if isinstance(v, ParamSpec):
+                quantizable = (len(v.shape) >= 2 and v.init == "normal"
+                               and v.dtype is None)
+                out[k] = dataclasses.replace(v, dtype=qdtype) \
+                    if quantizable else v
+                if quantizable:
+                    # keep scan-stack dims so per-period slicing still works
+                    nstack = sum(1 for a in v.axes
+                                 if a in ("periods", "layers"))
+                    out[k + "_scale"] = ParamSpec(
+                        v.shape[:nstack] + v.shape[-1:],
+                        v.axes[:nstack] + (v.axes[-1],),
+                        init="ones", dtype=jnp.float32)
+            else:
+                out[k] = walk(v)
+        return out
+    return walk(spec_tree)
+
+
+def quantize_params(params, spec_tree, qdtype=jnp.int8):
+    """Materialize int8/int4 params from bf16/f32 ones (symmetric, per
+    output channel over the last dim)."""
+    qspec = quantize_spec(spec_tree, qdtype)
+    qmax = 7.0 if qdtype == jnp.int4 else 127.0
+
+    def walk(p, d):
+        out = {}
+        for k, v in d.items():
+            if k.endswith("_scale") and k[:-6] in d:
+                continue
+            if isinstance(v, ParamSpec):
+                if (k + "_scale") in d:
+                    nstack = sum(1 for a in v.axes
+                                 if a in ("periods", "layers"))
+                    w = p[k].astype(jnp.float32)
+                    red = tuple(range(nstack, w.ndim - 1))
+                    s = jnp.max(jnp.abs(w), axis=red) / qmax + 1e-12
+                    sb = jnp.expand_dims(s, red)
+                    out[k] = jnp.clip(jnp.round(w / sb), -qmax, qmax
+                                      ).astype(qdtype)
+                    out[k + "_scale"] = s.astype(jnp.float32)
+                else:
+                    out[k] = p[k]
+            else:
+                out[k] = walk(p[k], v)
+        return out
+    return walk(params, qspec)
+
+
+def constrain(x, *logical_axes, rules: dict = None):
+    """with_sharding_constraint via logical axes (no-op outside a mesh)."""
+    rules = DEFAULT_RULES if rules is None else rules
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, make_pspec(tuple(logical_axes), rules))
+    except (ValueError, RuntimeError):
+        return x   # no mesh in scope (tests / single device)

@@ -1,0 +1,202 @@
+"""Policies in the paper's §3.4 model format: ``encode → recurrent → decode``.
+
+The forward pass is split so a recurrent cell can be sandwiched between the
+computation of hidden state and actions *per experiment*, without writing two
+models. ``OceanPolicy`` uses an MLP encoder with an optional LSTM cell;
+``BackbonePolicy`` wraps any assigned LM architecture — there the "recurrent
+cell" is the KV/SSM cache used by serve_step, flowing through the same
+interface.
+
+Both emit flat MultiDiscrete logits (one concatenated vector, static segment
+sizes) and a value estimate — exactly what an Atari-shaped learner expects,
+which is the emulation thesis end-to-end.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, init_params, abstract_params, \
+    param_pspecs
+from repro.models import transformer as tr
+from repro.models.layers import rms_norm
+
+
+# -- LSTM cell ----------------------------------------------------------------
+
+def lstm_spec(in_dim: int, hidden: int):
+    return {
+        "wi": ParamSpec((in_dim, 4 * hidden), ("null", "null"), fan_in=in_dim),
+        "wh": ParamSpec((hidden, 4 * hidden), ("null", "null"), fan_in=hidden),
+        "b": ParamSpec((4 * hidden,), ("null",), init="zeros"),
+    }
+
+
+def lstm_step(params, x, carry):
+    c, h = carry
+    gates = x @ params["wi"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, (c, h)
+
+
+# -- Ocean policy ---------------------------------------------------------------
+
+class OceanPolicy:
+    """MLP encoder (+ optional LSTM) + multidiscrete/value heads. The default
+    architecture of the paper's model zoo: "an MLP sized to the flat
+    observation and action spaces"."""
+
+    def __init__(self, obs_dim: int, nvec: tuple = (), hidden: int = 128,
+                 recurrent: bool = False, num_outputs: int = 0):
+        self.obs_dim, self.nvec, self.hidden = obs_dim, tuple(nvec), hidden
+        self.recurrent = recurrent
+        # num_outputs overrides for continuous heads (mean ++ log_std)
+        self.num_actions = num_outputs or sum(self.nvec)
+
+    def spec(self):
+        h = self.hidden
+        s = {
+            "enc1": ParamSpec((self.obs_dim, h), ("null", "null"),
+                              fan_in=self.obs_dim),
+            "b1": ParamSpec((h,), ("null",), init="zeros"),
+            "enc2": ParamSpec((h, h), ("null", "null"), fan_in=h),
+            "b2": ParamSpec((h,), ("null",), init="zeros"),
+            "act": ParamSpec((h, self.num_actions), ("null", "null"),
+                             fan_in=h),
+            "b_act": ParamSpec((self.num_actions,), ("null",), init="zeros"),
+            "val": ParamSpec((h, 1), ("null", "null"), fan_in=h),
+            "b_val": ParamSpec((1,), ("null",), init="zeros"),
+        }
+        if self.recurrent:
+            s["lstm"] = lstm_spec(h, h)
+        return s
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.spec(), key, dtype)
+
+    def initial_carry(self, batch: int):
+        if not self.recurrent:
+            return None
+        z = jnp.zeros((batch, self.hidden), jnp.float32)
+        return (z, z)
+
+    # paper §3.4 split ---------------------------------------------------------
+    def encode(self, params, obs):
+        h = jnp.tanh(obs @ params["enc1"] + params["b1"])
+        return jnp.tanh(h @ params["enc2"] + params["b2"])
+
+    def recurrent_cell(self, params, h, carry, reset=None):
+        if not self.recurrent:
+            return h, None
+        if reset is not None:
+            m = 1.0 - reset.astype(jnp.float32)[:, None]
+            carry = (carry[0] * m, carry[1] * m)
+        return lstm_step(params["lstm"], h, carry)
+
+    def decode(self, params, h):
+        logits = h @ params["act"] + params["b_act"]
+        value = (h @ params["val"] + params["b_val"])[..., 0]
+        return logits, value
+
+    # ---------------------------------------------------------------------------
+    def step(self, params, obs, carry, reset=None):
+        h = self.encode(params, obs)
+        h, carry = self.recurrent_cell(params, h, carry, reset)
+        logits, value = self.decode(params, h)
+        return logits, value, carry
+
+    def seq(self, params, obs_seq, carry, resets):
+        """obs_seq: (T, B, obs); resets: (T, B). Scan the cell over time,
+        resetting carry at episode starts (the LSTM-state bug the paper calls
+        out is exactly mishandling this)."""
+        if not self.recurrent:
+            h = self.encode(params, obs_seq)
+            logits, value = self.decode(params, h)
+            return logits, value, carry
+
+        def f(c, inp):
+            obs, reset = inp
+            h = self.encode(params, obs)
+            h, c = self.recurrent_cell(params, h, c, reset)
+            logits, value = self.decode(params, h)
+            return c, (logits, value)
+
+        carry, (logits, value) = jax.lax.scan(f, carry, (obs_seq, resets))
+        return logits, value, carry
+
+
+# -- LM backbone policy ---------------------------------------------------------
+
+class BackbonePolicy:
+    """Any assigned architecture as a token-level policy: actions are
+    next-token choices, the critic reads the same final hidden state."""
+
+    def __init__(self, cfg: ModelConfig, tp: int = 1, kernel: str = "auto",
+                 quantize: bool = False):
+        self.cfg, self.tp, self.kernel = cfg, tp, kernel
+        self.quantize = quantize     # int8 weights (serving path)
+        self.nvec = (cfg.vocab_size,)
+
+    def spec(self):
+        s = {"backbone": tr.transformer_spec(self.cfg, self.tp)}
+        if self.cfg.value_head:
+            s["value"] = ParamSpec((self.cfg.d_model, 1), ("embed", "null"),
+                                   fan_in=self.cfg.d_model)
+        if self.quantize:
+            import jax.numpy as _jnp
+            from repro.models.params import quantize_spec
+            qd = _jnp.int4 if self.quantize == "int4" else _jnp.int8
+            s = quantize_spec(s, qd)
+        return s
+
+    def init(self, key, dtype=None):
+        dtype = dtype or self.cfg.param_dtype
+        return init_params(self.spec(), key, jnp.dtype(dtype))
+
+    def abstract(self, dtype=None):
+        dtype = dtype or self.cfg.param_dtype
+        return abstract_params(self.spec(), jnp.dtype(dtype))
+
+    def pspecs(self, rules=None):
+        return param_pspecs(self.spec(), rules)
+
+    def _value(self, params, hidden):
+        if not self.cfg.value_head:
+            return jnp.zeros(hidden.shape[:-1], jnp.float32)
+        # dot in hidden.dtype, upcast after — an f32 dot here would promote
+        # the backward scan carry to f32 (see moe.moe_apply router note)
+        v = jnp.einsum("...d,dv->...v",
+                       hidden, params["value"].astype(hidden.dtype))
+        return v[..., 0].astype(jnp.float32)
+
+    def seq(self, params, inputs):
+        """Training forward. inputs: {"tokens": (B,T)[, "prefix": (B,P,d)]}.
+        Returns (logits (B,T',V), values (B,T'), aux)."""
+        hidden, aux = tr.forward(params["backbone"], inputs, self.cfg,
+                                 self.tp, kernel=self.kernel)
+        logits = tr.logits_from_hidden(params["backbone"], hidden, self.cfg)
+        return logits, self._value(params, hidden), aux
+
+    def prefill(self, params, inputs, max_len: int):
+        hidden, caches = tr.prefill(params["backbone"], inputs, self.cfg,
+                                    self.tp, max_len=max_len,
+                                    kernel=self.kernel)
+        last = hidden[:, -1:]
+        logits = tr.logits_from_hidden(params["backbone"], last, self.cfg)
+        return logits[:, 0], self._value(params, last)[:, 0], caches
+
+    def decode(self, params, tokens, caches, context_parallel: bool = False):
+        """tokens: (B, 1) — one serve_step."""
+        hidden, caches = tr.decode(params["backbone"], {"tokens": tokens},
+                                   self.cfg, caches, self.tp,
+                                   context_parallel=context_parallel)
+        logits = tr.logits_from_hidden(params["backbone"], hidden, self.cfg)
+        return logits[:, 0], self._value(params, hidden)[:, 0], caches
+
+    def init_caches(self, batch: int, max_len: int):
+        return tr.init_caches(self.cfg, self.tp, batch, max_len)

@@ -1,0 +1,157 @@
+"""Mamba2 block (SSD) — module layer over the kernels/ssd Pallas kernel.
+
+Block structure (Mamba2 paper): in_proj → [z | x | B | C | dt], short causal
+conv over (x,B,C), SiLU, SSD scan, gated RMSNorm (y·silu(z)), out_proj.
+Heads are sharded over "model" (they are independent); the recurrent state
+(B, H, hd, ds) is the policy's recurrent cell for serve_step — the paper's
+"LSTM sandwich" slot (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, constrain, use_weight, weight
+from repro.models.layers import rms_norm
+from repro.kernels import ops as kops
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, conv_dim) rolling input window
+    state: jax.Array   # (B, H, hd, ds)
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    ds = cfg.ssm_state
+    G = cfg.ssm_groups
+    conv_dim = di + 2 * G * ds
+    proj_dim = 2 * di + 2 * G * ds + H   # z, x, B, C, dt
+    return di, H, ds, G, conv_dim, proj_dim
+
+
+def ssm_spec(cfg: ModelConfig, stack: tuple = ()):
+    sizes = tuple(s for s, _ in stack)
+    names = tuple(n for _, n in stack)
+    di, H, ds, G, conv_dim, proj_dim = _dims(cfg)
+    return {
+        "in_proj": ParamSpec(sizes + (cfg.d_model, proj_dim),
+                             names + ("embed", "ssm_heads"), fan_in=cfg.d_model),
+        "conv_w": ParamSpec(sizes + (cfg.ssm_conv, conv_dim),
+                            names + ("null", "ssm_heads"), fan_in=cfg.ssm_conv),
+        "A_log": ParamSpec(sizes + (H,), names + ("ssm_heads",), init="zeros",
+                           dtype=jnp.float32),
+        "D": ParamSpec(sizes + (H,), names + ("ssm_heads",), init="zeros",
+                       dtype=jnp.float32),
+        "dt_bias": ParamSpec(sizes + (H,), names + ("ssm_heads",),
+                             init="zeros", dtype=jnp.float32),
+        "norm": ParamSpec(sizes + (di,), names + ("ssm_heads",), init="zeros",
+                          dtype=jnp.float32),
+        "out_proj": ParamSpec(sizes + (di, cfg.d_model),
+                              names + ("ssm_heads", "embed"), fan_in=di),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, H, ds, G, conv_dim, _ = _dims(cfg)
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def _expand_groups(b, cfg):
+    """(.., G, ds) group-projected B/C → per-head (.., H, ds)."""
+    H, G = cfg.ssm_heads, cfg.ssm_groups
+    return jnp.repeat(b, H // G, axis=-2)
+
+
+def ssm_apply(params, x, cfg: ModelConfig, kernel: str = "auto",
+              return_cache: bool = False):
+    """Full-sequence SSD. x: (B, T, d_model) → (B, T, d_model).
+    With ``return_cache`` also returns the SSMCache a decode loop continues
+    from (conv window of raw xBC + final SSD state)."""
+    B, T, _ = x.shape
+    di, H, ds, G, conv_dim, _ = _dims(cfg)
+    dt_ = cfg.dtype
+
+    w_in = weight(params, "in_proj", ("embed", "ssm_heads"))
+    zxbcdt = jnp.einsum("btd,dp->btp", x, w_in.astype(dt_))
+    z, xBC_raw, dt = _split_proj(zxbcdt, cfg)
+
+    # short causal conv over the (x,B,C) channels
+    w = params["conv_w"].astype(dt_)                     # (k, conv_dim)
+    pad = jnp.zeros((B, cfg.ssm_conv - 1, conv_dim), dt_)
+    xp = jnp.concatenate([pad, xBC_raw], axis=1)
+    xBC = sum(xp[:, i:i + T] * w[i] for i in range(cfg.ssm_conv))
+    xBC = jax.nn.silu(xBC)
+
+    xs, Bc, Cc = jnp.split(xBC, [di, di + G * ds], axis=-1)
+    xs = xs.reshape(B, T, H, cfg.ssm_head_dim)
+    Bc = _expand_groups(Bc.reshape(B, T, G, ds), cfg)
+    Cc = _expand_groups(Cc.reshape(B, T, G, ds), cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"])
+
+    xs = constrain(xs, "batch", "null", "ssm_heads", "null")
+    y, h_last = kops.ssd(xs, dt, A, Bc, Cc, chunk=cfg.ssm_chunk, mode=kernel)
+    y = y + params["D"].astype(dt_)[None, None, :, None] * xs
+    y = y.reshape(B, T, di)
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_),
+                 params["norm"], cfg.norm_eps)
+    w_out = weight(params, "out_proj", ("ssm_heads", "embed"))
+    out = jnp.einsum("bti,id->btd", y, w_out.astype(dt_))
+    if return_cache:
+        window = xp[:, T:]                                # last d_conv-1 raw
+        return out, SSMCache(window, h_last)
+    return out
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, stack_dims: tuple = (),
+                   dtype=None) -> SSMCache:
+    di, H, ds, G, conv_dim, _ = _dims(cfg)
+    dtype = dtype or cfg.dtype
+    return SSMCache(
+        conv=jnp.zeros(stack_dims + (batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        state=jnp.zeros(stack_dims + (batch, H, cfg.ssm_head_dim, ds),
+                        jnp.float32))
+
+
+def ssm_decode(params, x, cfg: ModelConfig, cache: SSMCache):
+    """One-token step: O(1) in context length. x: (B, 1, d_model)."""
+    B = x.shape[0]
+    di, H, ds, G, conv_dim, _ = _dims(cfg)
+    dt_ = cfg.dtype
+
+    w_in = weight(params, "in_proj", ("embed", "ssm_heads"))
+    zxbcdt = jnp.einsum("btd,dp->btp", x, w_in.astype(dt_))
+    z, xBC, dt = _split_proj(zxbcdt, cfg)               # (B,1,*)
+
+    window = jnp.concatenate([cache.conv, xBC], axis=1)  # (B, k, conv)
+    w = params["conv_w"].astype(dt_)
+    xc = jnp.einsum("bkc,kc->bc", window, w)[:, None]    # (B,1,conv)
+    xc = jax.nn.silu(xc)
+    new_conv = window[:, 1:]
+
+    xs, Bc, Cc = jnp.split(xc, [di, di + G * ds], axis=-1)
+    xs = xs.reshape(B, H, cfg.ssm_head_dim)
+    Bc = _expand_groups(Bc.reshape(B, G, ds), cfg).astype(jnp.float32)
+    Cc = _expand_groups(Cc.reshape(B, G, ds), cfg).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)[:, 0]
+                          + params["dt_bias"][None])     # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dtv * A[None])                       # (B,H)
+    upd = jnp.einsum("bh,bhd,bhs->bhds", dtv, xs.astype(jnp.float32), Bc)
+    state = cache.state * decay[..., None, None] + upd
+    y = jnp.einsum("bhds,bhs->bhd", state, Cc).astype(dt_)
+    y = y + params["D"].astype(dt_)[None, :, None] * xs
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_),
+                 params["norm"], cfg.norm_eps)
+    w_out = weight(params, "out_proj", ("ssm_heads", "embed"))
+    out = jnp.einsum("bti,id->btd", y, w_out.astype(dt_))
+    return out, SSMCache(new_conv, state)

@@ -1,0 +1,260 @@
+"""Backbone assembler: dense / MoE / SSM / hybrid stacks from one config.
+
+Layers are grouped into *periods* (the lcm of the MoE and attention interleave
+patterns — gemma: 1, llama4: 2, jamba: 8) and the stack is a ``lax.scan`` over
+periods with the period body under ``jax.checkpoint``. This keeps the traced
+HLO a single period deep regardless of depth — essential for the 80-cell
+multi-pod dry-run compile budget — and gives remat for the memory roofline.
+
+Three entry points: ``forward`` (train), ``prefill`` (build caches),
+``decode`` (one token against caches). Caches are pytrees stacked over
+periods, so decode is also a single scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, constrain
+from repro.models import layers as L
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+
+def stack_period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.num_experts:
+        p = math.lcm(p, cfg.moe_period)
+    if cfg.ssm_state and cfg.attn_period:
+        p = math.lcm(p, cfg.attn_period)
+    return p
+
+
+def _norm_spec(cfg, stack):
+    sizes = tuple(s for s, _ in stack)
+    names = tuple(n for _, n in stack)
+    return ParamSpec(sizes + (cfg.d_model,), names + ("embed",),
+                     init="zeros", dtype=jnp.float32)
+
+
+def layer_kinds(cfg: ModelConfig, i: int):
+    mixer = "attn" if cfg.is_attn_layer(i) else "ssm"
+    if cfg.d_ff == 0 and not cfg.is_moe_layer(i):
+        ffn = None
+    else:
+        ffn = "moe" if cfg.is_moe_layer(i) else "mlp"
+    return mixer, ffn
+
+
+def transformer_spec(cfg: ModelConfig, tp: int):
+    period = stack_period(cfg)
+    assert cfg.num_layers % period == 0, (cfg.name, cfg.num_layers, period)
+    n_periods = cfg.num_layers // period
+    stack = ((n_periods, "periods"),)
+
+    spec: dict = {"embedding": L.embedding_spec(cfg)}
+    layers = {}
+    for i in range(period):
+        mixer, ffn = layer_kinds(cfg, i)
+        l: dict = {}
+        if mixer == "attn":
+            l["ln_mix"] = _norm_spec(cfg, stack)
+            l["attn"] = attn.attention_spec(cfg, tp, stack)
+        else:
+            l["ln_mix"] = _norm_spec(cfg, stack)
+            l["ssm"] = ssm_mod.ssm_spec(cfg, stack)
+        if ffn == "mlp":
+            l["ln_ffn"] = _norm_spec(cfg, stack)
+            l["mlp"] = L.make_mlp_spec(cfg, stack=stack)
+        elif ffn == "moe":
+            l["ln_ffn"] = _norm_spec(cfg, stack)
+            l["moe"] = moe_mod.moe_spec(cfg, stack)
+        layers[f"l{i}"] = l
+    spec["layers"] = layers
+    spec["final_norm"] = _norm_spec(cfg, ())
+    spec.update(L.unembed_spec(cfg))
+    return spec
+
+
+def _remat(f, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_saveable
+        return jax.checkpoint(f, policy=pol)
+    return jax.checkpoint(f)   # "full": save nothing
+
+
+def _embed_inputs(params, inputs, cfg: ModelConfig):
+    """inputs: {"tokens": (B,Tt) i32, ["prefix": (B,P,d)]} → (B,T,d)."""
+    x = L.embed_tokens(params["embedding"], inputs["tokens"], cfg)
+    if "prefix" in inputs:   # vlm/audio stub frontend (DESIGN.md §3)
+        x = jnp.concatenate([inputs["prefix"].astype(cfg.dtype), x], axis=1)
+    return constrain(x, "batch", "null", "embed_act")
+
+
+# activation sharding rules (logical names used only inside this module)
+ACT_RULES = {"batch": "data", "embed_act": None, "null": None}
+
+
+def _period_body_full(cfg: ModelConfig, tp: int, kernel: str):
+    period = stack_period(cfg)
+
+    def body(x, pparams):
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(period):
+            p = pparams[f"l{i}"]
+            mixer, ffn = layer_kinds(cfg, i)
+            h = L.rms_norm(x, p["ln_mix"], cfg.norm_eps)
+            if mixer == "attn":
+                x = x + attn.attend_full(p["attn"], h, cfg, tp, kernel=kernel)
+            else:
+                x = x + ssm_mod.ssm_apply(p["ssm"], h, cfg, kernel=kernel)
+            if ffn is not None:
+                h = L.rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+                if ffn == "moe":
+                    y, a = moe_mod.moe_apply(p["moe"], h, cfg)
+                    x, aux = x + y, aux + a
+                else:
+                    x = x + L.mlp_apply(p["mlp"], h, cfg)
+            x = constrain(x, "batch", "null", "embed_act")
+        return x, aux
+    return body
+
+
+def forward(params, inputs, cfg: ModelConfig, tp: int = 1,
+            kernel: str = "auto"):
+    """Full-sequence forward. Returns (hidden (B,T,d), aux dict)."""
+    x = _embed_inputs(params, inputs, cfg)
+    body = _period_body_full(cfg, tp, kernel)
+    body = _remat(body, cfg)
+
+    def scan_fn(carry, pparams):
+        x, aux = carry
+        x, a = body(x, pparams)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, {"moe_aux": aux}
+
+
+def logits_from_hidden(params, x, cfg: ModelConfig):
+    logits = L.unembed(params, params["embedding"], x, cfg)
+    v = cfg.padded_vocab()
+    if v != cfg.vocab_size:   # mask TP padding, keep the shard layout
+        mask = jnp.arange(v) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+# -- caches -------------------------------------------------------------------
+
+class Caches(NamedTuple):
+    kv: Any      # dict l{i} -> KVCache with leading (n_periods,) OR None
+    ssm: Any     # dict l{i} -> SSMCache with leading (n_periods,) OR None
+    length: jax.Array
+
+
+def init_caches(cfg: ModelConfig, tp: int, batch: int, max_len: int) -> Caches:
+    period = stack_period(cfg)
+    n_periods = cfg.num_layers // period
+    kv, ssm = {}, {}
+    for i in range(period):
+        mixer, _ = layer_kinds(cfg, i)
+        if mixer == "attn":
+            kv[f"l{i}"] = attn.init_cache(cfg, tp, batch, max_len,
+                                          stack_dims=(n_periods,))
+        else:
+            ssm[f"l{i}"] = ssm_mod.init_ssm_cache(cfg, batch,
+                                                  stack_dims=(n_periods,))
+    return Caches(kv, ssm, jnp.zeros((), jnp.int32))
+
+
+def prefill(params, inputs, cfg: ModelConfig, tp: int = 1, max_len: int = 0,
+            kernel: str = "auto"):
+    """Forward + cache build. Returns (hidden, caches)."""
+    x = _embed_inputs(params, inputs, cfg)
+    B, T, _ = x.shape
+    max_len = max_len or T
+    period = stack_period(cfg)
+
+    def body(x, scanned):
+        pparams, cin = scanned
+        new_kv, new_ssm = {}, {}
+        for i in range(period):
+            p = pparams[f"l{i}"]
+            mixer, ffn = layer_kinds(cfg, i)
+            h = L.rms_norm(x, p["ln_mix"], cfg.norm_eps)
+            if mixer == "attn":
+                y, c = attn.attend_prefill(p["attn"], h, cfg, tp,
+                                           cin[0][f"l{i}"], kernel=kernel)
+                new_kv[f"l{i}"] = c
+                x = x + y
+            else:
+                y, c = ssm_mod.ssm_apply(p["ssm"], h, cfg, kernel=kernel,
+                                         return_cache=True)
+                new_ssm[f"l{i}"] = c
+                x = x + y
+            if ffn is not None:
+                h = L.rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+                if ffn == "moe":
+                    y, _ = moe_mod.moe_apply(p["moe"], h, cfg)
+                    x = x + y
+                else:
+                    x = x + L.mlp_apply(p["mlp"], h, cfg)
+        return x, (new_kv, new_ssm)
+
+    caches = init_caches(cfg, tp, B, max_len)
+
+    def scan_fn(x, scanned):
+        return body(x, scanned)
+
+    x, (kv, ssm) = jax.lax.scan(scan_fn, x, (params["layers"],
+                                             (caches.kv, caches.ssm)))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, Caches(kv, ssm, jnp.asarray(T, jnp.int32))
+
+
+def decode(params, inputs, cfg: ModelConfig, caches: Caches, tp: int = 1,
+           context_parallel: bool = False):
+    """One-token step. inputs: {"tokens": (B, 1)}. Returns (hidden, caches)."""
+    x = _embed_inputs(params, inputs, cfg)
+    period = stack_period(cfg)
+
+    def body(x, scanned):
+        pparams, cin = scanned
+        new_kv, new_ssm = {}, {}
+        for i in range(period):
+            p = pparams[f"l{i}"]
+            mixer, ffn = layer_kinds(cfg, i)
+            h = L.rms_norm(x, p["ln_mix"], cfg.norm_eps)
+            if mixer == "attn":
+                kvc = cin[0][f"l{i}"]._replace(length=caches.length)
+                y, c = attn.attend_decode(p["attn"], h, cfg, tp, kvc,
+                                          context_parallel=context_parallel)
+                new_kv[f"l{i}"] = c._replace(length=jnp.zeros((), jnp.int32))
+                x = x + y
+            else:
+                y, c = ssm_mod.ssm_decode(p["ssm"], h, cfg, cin[1][f"l{i}"])
+                new_ssm[f"l{i}"] = c
+                x = x + y
+            if ffn is not None:
+                h = L.rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+                if ffn == "moe":
+                    y, _ = moe_mod.moe_apply(p["moe"], h, cfg)
+                    x = x + y
+                else:
+                    x = x + L.mlp_apply(p["mlp"], h, cfg)
+        return x, (new_kv, new_ssm)
+
+    x, (kv, ssm) = jax.lax.scan(body, x, (params["layers"],
+                                          (caches.kv, caches.ssm)))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, Caches(kv, ssm, caches.length + 1)

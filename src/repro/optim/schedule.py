@@ -1,0 +1,16 @@
+"""LR schedules (pure functions of the int32 step)."""
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr, warmup_steps, total_steps, final_frac=0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / jnp.maximum(1.0, float(warmup_steps))
+    t = jnp.clip((s - warmup_steps) / max(1.0, total_steps - warmup_steps),
+                 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5
+                     * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr, **_):
+    return jnp.full((), peak_lr, jnp.float32)

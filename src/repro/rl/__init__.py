@@ -1,0 +1,4 @@
+from repro.rl import distributions, ppo, rollout, learner, actor, trainer
+from repro.rl.learner import TrainState, init_train_state, \
+    make_ocean_update, make_lm_train_step, lm_batch_fields
+from repro.rl.trainer import Trainer

@@ -1,0 +1,50 @@
+"""Acting / serving: prefill_step and serve_step (the decode-shape programs).
+
+serve_step is one token of autoregressive acting against the recurrent cell
+(KV cache / SSM state) — the paper's encode→recurrent→decode interface at
+inference time. ``context_parallel`` shards the KV sequence dim over "data"
+for long_500k (DESIGN.md §4 CP).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(policy, max_len: int):
+    def prefill_step(params, inputs, key):
+        logits, value, caches = policy.prefill(params, inputs, max_len)
+        tok = jax.random.categorical(key, logits).astype(jnp.int32)
+        return tok[:, None], value, caches
+    return prefill_step
+
+
+def make_serve_step(policy, temperature: float = 1.0,
+                    context_parallel: bool = False, greedy: bool = False):
+    def serve_step(params, tokens, caches, key):
+        logits, value, caches = policy.decode(
+            params, tokens, caches, context_parallel=context_parallel)
+        if greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            tok = jax.random.categorical(
+                key, logits / temperature).astype(jnp.int32)
+        return tok[:, None], value, caches
+    return serve_step
+
+
+def generate(policy, params, prompt, num_tokens: int, key, max_len: int = 0,
+             temperature: float = 1.0):
+    """Batched autoregressive generation (examples/serving driver)."""
+    B, Tp = prompt.shape
+    max_len = max_len or (Tp + num_tokens)
+    prefill = make_prefill_step(policy, max_len)
+    serve = jax.jit(make_serve_step(policy, temperature))
+    k0, key = jax.random.split(key)
+    tok, _, caches = prefill(params, {"tokens": prompt}, k0)
+    out = [tok]
+    for i in range(num_tokens - 1):
+        key, sub = jax.random.split(key)
+        tok, _, caches = serve(params, tok, caches, sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

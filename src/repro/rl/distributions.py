@@ -1,0 +1,104 @@
+"""Factored MultiDiscrete categorical over one concatenated logit vector.
+
+The emulation layer turns every action tree into a single MultiDiscrete; the
+policy emits one (…, sum(nvec)) logit vector. Joint log-prob/entropy are sums
+over the independent components. Segment boundaries are static.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _segments(nvec):
+    off = 0
+    for n in nvec:
+        yield off, n
+        off += n
+
+
+def sample(key, logits, nvec):
+    """logits: (..., sum(nvec)) → actions (..., len(nvec)) int32."""
+    outs = []
+    for i, (off, n) in enumerate(_segments(nvec)):
+        k = jax.random.fold_in(key, i)
+        outs.append(jax.random.categorical(k, logits[..., off:off + n]))
+    return jnp.stack(outs, axis=-1).astype(jnp.int32)
+
+
+def log_prob(logits, actions, nvec):
+    """actions: (..., len(nvec)); returns (...)."""
+    total = 0.0
+    for i, (off, n) in enumerate(_segments(nvec)):
+        lp = jax.nn.log_softmax(logits[..., off:off + n].astype(jnp.float32))
+        total = total + jnp.take_along_axis(
+            lp, actions[..., i:i + 1], axis=-1)[..., 0]
+    return total
+
+
+def entropy(logits, nvec):
+    total = 0.0
+    for off, n in _segments(nvec):
+        lp = jax.nn.log_softmax(logits[..., off:off + n].astype(jnp.float32))
+        total = total + -jnp.sum(jnp.exp(lp) * lp, axis=-1)
+    return total
+
+
+def mode(logits, nvec):
+    outs = []
+    for off, n in _segments(nvec):
+        outs.append(jnp.argmax(logits[..., off:off + n], axis=-1))
+    return jnp.stack(outs, axis=-1).astype(jnp.int32)
+
+
+# -- diagonal Gaussian (continuous actions — the paper's §8 limitation,
+# -- implemented here as a beyond-paper feature) ------------------------------
+
+def gaussian_sample(key, out, cont_dim: int):
+    """out: (..., 2*cont_dim) = [mean ‖ log_std] from the policy head."""
+    mean, log_std = out[..., :cont_dim], out[..., cont_dim:]
+    noise = jax.random.normal(key, mean.shape)
+    return mean + jnp.exp(jnp.clip(log_std, -5.0, 2.0)) * noise
+
+
+def gaussian_log_prob(out, actions, cont_dim: int):
+    mean, log_std = out[..., :cont_dim], out[..., cont_dim:]
+    log_std = jnp.clip(log_std, -5.0, 2.0)
+    z = (actions - mean) * jnp.exp(-log_std)
+    return jnp.sum(-0.5 * jnp.square(z) - log_std
+                   - 0.5 * jnp.log(2 * jnp.pi), axis=-1)
+
+
+def gaussian_entropy(out, cont_dim: int):
+    log_std = jnp.clip(out[..., cont_dim:], -5.0, 2.0)
+    return jnp.sum(log_std + 0.5 * jnp.log(2 * jnp.pi * jnp.e), axis=-1)
+
+
+class Dist:
+    """Policy-output distribution facade: one object the rollout/learner use
+    regardless of action kind (MultiDiscrete or continuous Gaussian)."""
+
+    def __init__(self, kind: str, nvec=(), cont_dim: int = 0):
+        assert kind in ("categorical", "gaussian")
+        self.kind, self.nvec, self.cont_dim = kind, tuple(nvec), cont_dim
+        self.num_outputs = (sum(self.nvec) if kind == "categorical"
+                            else 2 * cont_dim)
+        self.action_dim = (len(self.nvec) if kind == "categorical"
+                           else cont_dim)
+        self.action_dtype = jnp.int32 if kind == "categorical" \
+            else jnp.float32
+
+    def sample(self, key, out):
+        if self.kind == "categorical":
+            return sample(key, out, self.nvec)
+        return gaussian_sample(key, out, self.cont_dim)
+
+    def log_prob(self, out, actions):
+        if self.kind == "categorical":
+            return log_prob(out, actions, self.nvec)
+        return gaussian_log_prob(out, actions, self.cont_dim)
+
+    def entropy(self, out):
+        if self.kind == "categorical":
+            return entropy(out, self.nvec)
+        return gaussian_entropy(out, self.cont_dim)

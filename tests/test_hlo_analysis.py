@@ -1,0 +1,105 @@
+"""HLO cost analyzer: validated against programs with known costs."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch.hlo_analysis import analyze
+
+# 1. plain matmul, known flops
+def f(a, b): return a @ b
+a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+c = jax.jit(f).lower(a, a).compile()
+an = analyze(c.as_text(), 1)
+exp = 2 * 256**3
+assert abs(an["flops"] - exp) / exp < 0.01, (an["flops"], exp)
+
+# 2. scan multiplies body cost by trip count
+def g(a):
+    def body(x, _): return jnp.tanh(x @ x), None
+    x, _ = jax.lax.scan(body, a, None, length=11)
+    return x
+c = jax.jit(g).lower(a).compile()
+an = analyze(c.as_text(), 1)
+exp = 11 * 2 * 256**3
+assert abs(an["flops"] - exp) / exp < 0.01, (an["flops"], exp)
+
+# 3. sharded: per-device flops + collective accounting
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+sa = NamedSharding(mesh, P("data", None))
+sw = NamedSharding(mesh, P(None, "model"))
+def h(x, w):
+    y = x @ w                       # local
+    return jnp.sum(y.astype(jnp.float32))
+x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+w = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+with mesh:
+    c = jax.jit(h, in_shardings=(sa, sw)).lower(x, w).compile()
+an = analyze(c.as_text(), 8)
+exp = 2 * 32 * 128 * 16             # per-device
+assert abs(an["flops"] - exp) / exp < 0.01, (an["flops"], exp)
+assert an["collective_bytes"] > 0   # the final sum all-reduces
+
+# 4. nested scan (scan inside scan) multiplies both trip counts
+def nested(a):
+    def outer(x, _):
+        def inner(y, _): return y @ y, None
+        y, _ = jax.lax.scan(inner, x, None, length=3)
+        return y, None
+    x, _ = jax.lax.scan(outer, a, None, length=5)
+    return x
+c = jax.jit(nested).lower(jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()
+an = analyze(c.as_text(), 1)
+exp = 15 * 2 * 128**3
+assert abs(an["flops"] - exp) / exp < 0.01, (an["flops"], exp)
+print("HLO_ANALYSIS_OK")
+"""
+
+
+def test_hlo_analysis_known_costs():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True, env=env, cwd=ROOT)
+    assert "HLO_ANALYSIS_OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_parser_handles_comments_and_tuples():
+    from repro.launch.hlo_analysis import parse
+    text = """
+HloModule test
+
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %d = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c = s32[] constant(1)
+  %j = s32[] add(%i, %c)
+  ROOT %t = (s32[], f32[4,4]) tuple(%j, %d)
+}
+
+%cond (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(9)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[4,4]) -> (s32[], /*index=1*/f32[4,4]) {
+  %a = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4,4]) tuple(%z, %a)
+  ROOT %w = (s32[], /*index=1*/f32[4,4]) while(%t0), condition=%cond, body=%body
+}
+"""
+    from repro.launch.hlo_analysis import analyze
+    an = analyze(text, 1)
+    assert an["flops"] == 9 * 2 * 4 * 4 * 4, an["flops"]

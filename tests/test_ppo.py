@@ -1,0 +1,165 @@
+"""PPO correctness: distributions, loss properties, learning on Ocean."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.rl import distributions as D
+from repro.rl import ppo
+
+
+def test_multidiscrete_logprob_sums_components():
+    nvec = (3, 4)
+    logits = jax.random.normal(jax.random.PRNGKey(0), (5, 7))
+    a = jnp.stack([jnp.zeros(5, jnp.int32), jnp.ones(5, jnp.int32)], -1)
+    lp = D.log_prob(logits, a, nvec)
+    lp0 = jax.nn.log_softmax(logits[:, :3])[:, 0]
+    lp1 = jax.nn.log_softmax(logits[:, 3:])[:, 1]
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lp0 + lp1),
+                               rtol=1e-6)
+
+
+def test_entropy_uniform_is_log_n():
+    nvec = (4,)
+    ent = D.entropy(jnp.zeros((3, 4)), nvec)
+    np.testing.assert_allclose(np.asarray(ent), np.log(4), rtol=1e-6)
+
+
+def test_sample_distribution():
+    nvec = (2,)
+    logits = jnp.asarray([[0.0, jnp.log(3.0)]])   # p = [0.25, 0.75]
+    keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+    s = jax.vmap(lambda k: D.sample(k, logits, nvec))(keys)
+    frac1 = float(jnp.mean(s == 1))
+    assert 0.70 < frac1 < 0.80
+
+
+def test_ppo_terms_zero_at_ratio_one():
+    tcfg = TrainConfig()
+    lp = jnp.asarray([-1.0, -2.0, -0.5])
+    adv = jnp.asarray([1.0, -1.0, 0.5])
+    pg, kl, cf = ppo.ppo_terms(lp, lp, adv, tcfg)
+    np.testing.assert_allclose(float(pg), -float(jnp.mean(adv)), rtol=1e-6)
+    assert abs(float(kl)) < 1e-6 and float(cf) == 0.0
+
+
+def test_ppo_clipping_engages():
+    tcfg = TrainConfig(clip_coef=0.2)
+    old = jnp.zeros((4,))
+    new = jnp.asarray([1.0, 1.0, -1.0, -1.0])    # big ratios
+    adv = jnp.asarray([1.0, -1.0, 1.0, -1.0])
+    pg, kl, cf = ppo.ppo_terms(new, old, adv, tcfg)
+    assert float(cf) == 1.0
+
+
+def test_value_loss_clipped_vs_unclipped():
+    tcfg = TrainConfig(vf_clip=0.1)
+    old_v = jnp.zeros((4,))
+    new_v = jnp.asarray([1.0, 1.0, 1.0, 1.0])    # moved far from old
+    ret = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+    vl = ppo.value_loss(new_v, old_v, ret, tcfg)
+    # clipped prediction 0.1 is far from return 1 -> loss stays high
+    assert float(vl) >= 0.5 * (0.9 ** 2) - 1e-6
+
+
+def test_chunked_token_loss_matches_unchunked():
+    """Chunked vocab loss == direct computation on small shapes."""
+    from repro.configs import get_smoke_config, with_overrides
+    from repro.models.policy import BackbonePolicy
+    from repro.models import transformer as tr
+    cfg = with_overrides(get_smoke_config("qwen3-0.6b"), num_layers=2,
+                         dtype="float32", param_dtype="float32")
+    pol = BackbonePolicy(cfg, tp=1, kernel="ref")
+    params = pol.init(jax.random.PRNGKey(0), jnp.float32)
+    B, T = 2, 16
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    hidden, _ = tr.forward(params["backbone"], {"tokens": toks}, cfg, 1,
+                           kernel="ref")
+    actions = jax.random.randint(jax.random.fold_in(key, 1), (B, T), 0,
+                                 cfg.vocab_size)
+    olp = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (B, T)))
+    adv = jax.random.normal(jax.random.fold_in(key, 3), (B, T))
+    tcfg = TrainConfig()
+    pg8, ent8, kl8, cf8 = ppo.chunked_token_loss(
+        params["backbone"], hidden, actions, olp, adv, cfg, tcfg, chunk=8)
+    pg16, ent16, kl16, cf16 = ppo.chunked_token_loss(
+        params["backbone"], hidden, actions, olp, adv, cfg, tcfg, chunk=16)
+    np.testing.assert_allclose(float(pg8), float(pg16), rtol=1e-5)
+    np.testing.assert_allclose(float(ent8), float(ent16), rtol=1e-5)
+    np.testing.assert_allclose(float(kl8), float(kl16), rtol=1e-5)
+
+
+def test_adamw_decreases_quadratic():
+    from repro.optim import adamw
+    w = {"w": jnp.asarray([5.0, -3.0])}
+    st = adamw.init(w)
+    for _ in range(200):
+        g = {"w": 2 * w["w"]}
+        w, st, _ = adamw.update(g, st, w, lr=0.1)
+    assert float(jnp.max(jnp.abs(w["w"]))) < 0.5
+
+
+def test_grad_clip():
+    from repro.optim import adamw
+    w = {"w": jnp.ones((3,))}
+    st = adamw.init(w)
+    g = {"w": jnp.full((3,), 1e6)}
+    _, _, stats = adamw.update(g, st, w, lr=0.1, max_grad_norm=1.0)
+    assert float(stats["grad_norm"]) > 1e5   # reported pre-clip
+
+
+@pytest.mark.slow
+def test_ppo_solves_bandit():
+    from repro.envs.ocean import Bandit
+    from repro.rl.trainer import Trainer
+    tr = Trainer(Bandit(), TrainConfig(num_envs=64, unroll_length=64,
+                                       update_epochs=4, num_minibatches=4,
+                                       learning_rate=1e-3, gamma=0.95),
+                 hidden=64, kernel_mode="ref")
+    m = tr.train(120_000, target_score=0.9)
+    assert m["score"] >= 0.9, m
+
+
+@pytest.mark.slow
+def test_ppo_solves_memory_only_with_recurrence():
+    """The paper's point: Memory is unsolvable without the LSTM sandwich."""
+    from repro.envs.ocean import Memory
+    from repro.rl.trainer import Trainer
+    tcfg = TrainConfig(num_envs=64, unroll_length=64, update_epochs=4,
+                       num_minibatches=4, learning_rate=1e-3, gamma=0.95)
+    rec = Trainer(Memory(), tcfg, hidden=64, recurrent=True,
+                  kernel_mode="ref").train(400_000, target_score=0.9)
+    assert rec["score"] >= 0.9, rec
+    flat = Trainer(Memory(), tcfg, hidden=64, recurrent=False,
+                   kernel_mode="ref").train(150_000, target_score=0.95)
+    assert flat["score"] < 0.9, flat
+
+
+def test_gaussian_distribution():
+    """Continuous-action support (the paper's §8 limitation, implemented)."""
+    out = jnp.asarray([[1.0, -2.0, 0.0, 0.0]])   # mean=(1,-2), log_std=0
+    lp = D.gaussian_log_prob(out, jnp.asarray([[1.0, -2.0]]), 2)
+    # at the mean: logp = -0.5*log(2*pi)*2
+    np.testing.assert_allclose(float(lp[0]), -np.log(2 * np.pi), rtol=1e-6)
+    ent = D.gaussian_entropy(out, 2)
+    np.testing.assert_allclose(float(ent[0]), np.log(2 * np.pi * np.e),
+                               rtol=1e-6)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2000)
+    s = jax.vmap(lambda k: D.gaussian_sample(k, out, 2))(keys)
+    np.testing.assert_allclose(np.asarray(s.mean(0))[0], [1.0, -2.0],
+                               atol=0.1)
+
+
+@pytest.mark.slow
+def test_ppo_solves_continuous_env():
+    """Gaussian PPO end-to-end through emulation on a Box action space."""
+    from repro.envs.ocean import Continuous
+    from repro.rl.trainer import Trainer
+    tr = Trainer(Continuous(), TrainConfig(num_envs=64, unroll_length=64,
+                                           update_epochs=4, num_minibatches=4,
+                                           learning_rate=1e-3, gamma=0.95),
+                 hidden=64, kernel_mode="ref")
+    m = tr.train(400_000, target_score=0.9)
+    assert m["score"] >= 0.9, m

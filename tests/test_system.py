@@ -1,0 +1,87 @@
+"""End-to-end behaviour: the paper's full stack solves its own sanity suite,
+the LM path learns, and checkpoint-restart is transparent."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+
+
+def test_emulated_ppo_solves_spaces_env():
+    """Nested Dict obs + Dict actions through emulation + PPO end-to-end —
+    the paper's central claim, learned, not just round-tripped."""
+    from repro.envs.ocean import Spaces
+    from repro.rl.trainer import Trainer
+    tr = Trainer(Spaces(), TrainConfig(num_envs=64, unroll_length=64,
+                                       update_epochs=4, num_minibatches=4,
+                                       learning_rate=1e-3, gamma=0.95),
+                 hidden=64, kernel_mode="ref")
+    m = tr.train(150_000, target_score=0.9)
+    assert m["score"] >= 0.9, m
+
+
+def test_ocean_coffee_break_suite():
+    """Three envs, each < ~60s on one CPU core (paper §4)."""
+    from repro.envs.ocean import Bandit, Stochastic, Squared
+    from repro.rl.trainer import Trainer
+    tcfg = TrainConfig(num_envs=64, unroll_length=64, update_epochs=4,
+                       num_minibatches=4, learning_rate=1e-3, gamma=0.95)
+    for env, steps in [(Squared(), 300_000), (Stochastic(), 200_000),
+                       (Bandit(), 120_000)]:
+        m = Trainer(env, tcfg, hidden=64, kernel_mode="ref").train(
+            steps, target_score=0.9)
+        assert m["score"] >= 0.9, (type(env).__name__, m)
+
+
+def test_lm_ppo_improves_objective():
+    """Token-level PPO on a fixed batch reduces its own loss (sanity that
+    the whole learner stack — GAE, chunked loss, AdamW — optimizes)."""
+    from repro.configs import get_smoke_config, with_overrides
+    from repro.models.policy import BackbonePolicy
+    from repro.rl.learner import init_train_state, make_lm_train_step
+    from repro.data.buffer import random_batch
+    cfg = with_overrides(get_smoke_config("qwen3-0.6b"), num_layers=2,
+                         dtype="float32", param_dtype="float32")
+    pol = BackbonePolicy(cfg, tp=1, kernel="ref")
+    ts = init_train_state(pol.init(jax.random.PRNGKey(0)))
+    step = jax.jit(make_lm_train_step(pol, TrainConfig(learning_rate=1e-4,
+                                                       warmup_steps=1),
+                                      loss_chunk=8))
+    batch = random_batch(cfg, 4, 32, jax.random.PRNGKey(1))
+    losses = []
+    for _ in range(8):
+        ts, m = step(ts, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_checkpoint_restart_transparent(tmp_path):
+    """Kill-and-resume reproduces the uninterrupted run exactly."""
+    from repro.envs.ocean import Bandit
+    from repro.rl.trainer import Trainer
+    tcfg = TrainConfig(num_envs=16, unroll_length=32, update_epochs=1,
+                       num_minibatches=1)
+    tr = Trainer(Bandit(), tcfg, hidden=32, kernel_mode="ref", seed=3)
+    tr.train(5 * tr.steps_per_update)
+    tr.save(str(tmp_path))
+    w_before = np.asarray(tr.ts.params["act"])
+
+    tr2 = Trainer(Bandit(), tcfg, hidden=32, kernel_mode="ref", seed=99)
+    tr2.restore(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(tr2.ts.params["act"]), w_before)
+    assert int(tr2.ts.step) == int(tr.ts.step)
+
+
+def test_generate_produces_tokens():
+    from repro.configs import get_smoke_config
+    from repro.models.policy import BackbonePolicy
+    from repro.rl import actor
+    cfg = get_smoke_config("qwen3-0.6b")
+    pol = BackbonePolicy(cfg, tp=1, kernel="ref")
+    params = pol.init(jax.random.PRNGKey(0))
+    prompt = jnp.ones((2, 8), jnp.int32)
+    out = actor.generate(pol, params, prompt, 6, jax.random.PRNGKey(1),
+                         max_len=14)
+    assert out.shape == (2, 6)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
