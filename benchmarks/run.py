@@ -15,6 +15,9 @@ def main() -> None:
     bench_pool_host.main()
     print("# §4 — Ocean solve table")
     bench_ocean.main()
+    print("# §3.3 — kernel backend autotune")
+    from benchmarks import bench_kernels
+    bench_kernels.main()
     if os.path.exists("results/dryrun_baseline_final.json"):
         print("# §Roofline (from dry-run sweep)")
         from benchmarks import roofline

@@ -1,3 +1,13 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel layer: Pallas TPU kernels behind a dispatch registry.
+
+- ``ops``      — public op functions (what models/rl call)
+- ``dispatch`` — registry: (op, platform, JAX version) → implementation,
+  env/scoped overrides, autotune
+- ``compat``   — shims over ``jax.experimental.pallas`` API drift
+- ``ref``      — pure-jnp oracles (correctness ground truth)
+- one module per Pallas kernel (flash_attention, flash_decode,
+  quant_matmul, gae_scan, ssd, pack)
+
+New fused kernels land as registry entries (``dispatch.register``) and
+automatically join the interpret-vs-ref parity sweep in tests.
+"""

@@ -1,0 +1,71 @@
+"""Version-compat shims over ``jax.experimental.pallas`` API drift.
+
+The Pallas TPU surface keeps getting renamed across JAX releases — most
+visibly the compiler-params class (plain dicts, then
+``pltpu.TPUCompilerParams``, then ``pltpu.CompilerParams``). Kernel
+modules must not construct a hardcoded TPU-only name at trace time:
+they call :func:`compiler_params`, which resolves whichever spelling
+this JAX ships and returns ``None`` (a valid ``pallas_call`` argument)
+when none exists — e.g. a CPU-only install without the TPU extras,
+where interpret mode ignores compiler params anyway.
+
+Everything Pallas-shaped is imported through here so the rest of the
+package degrades to the ``ref`` implementations when Pallas itself is
+absent.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def jax_version() -> tuple:
+    """(major, minor, patch) ints, tolerant of dev/rc suffixes."""
+    parts = []
+    for piece in jax.__version__.split(".")[:3]:
+        digits = "".join(ch for ch in piece if ch.isdigit())
+        if not digits:
+            break
+        parts.append(int(digits))
+    return tuple(parts)
+
+
+try:
+    from jax.experimental import pallas as pl            # noqa: F401
+    from jax.experimental.pallas import tpu as pltpu     # noqa: F401
+    HAS_PALLAS = True
+except ImportError:   # pragma: no cover — CPU wheels without pallas
+    pl = None
+    pltpu = None
+    HAS_PALLAS = False
+
+
+def _compiler_params_cls():
+    if pltpu is None:
+        return None
+    # newest spelling first; fall back through the rename history
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    return None
+
+
+COMPILER_PARAMS_CLS = _compiler_params_cls()
+
+
+def compiler_params(*, dimension_semantics=None, **kwargs):
+    """Build the TPU compiler-params object under whichever name this JAX
+    spells it. Unknown kwargs are dropped (fields also drift between
+    releases); returns ``None`` when no class is available."""
+    cls = COMPILER_PARAMS_CLS
+    if cls is None:
+        return None
+    kw = dict(kwargs)
+    if dimension_semantics is not None:
+        kw["dimension_semantics"] = tuple(dimension_semantics)
+    try:
+        return cls(**kw)
+    except TypeError:
+        import inspect
+        fields = inspect.signature(cls).parameters
+        return cls(**{k: v for k, v in kw.items() if k in fields})

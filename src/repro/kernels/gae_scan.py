@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import compiler_params
+
 
 def _kernel(r_ref, v_ref, nt_ref, lastv_ref, adv_ref, carry_ref, *,
             gamma: float, lam: float, block_t: int):
@@ -76,7 +78,7 @@ def gae(rewards, values, dones, last_value, gamma: float, lam: float,
         out_specs=pl.BlockSpec((block_b, block_t), rev),
         out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
         scratch_shapes=[pltpu.VMEM((2, block_b), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rewards.astype(jnp.float32), values.astype(jnp.float32), nonterm,

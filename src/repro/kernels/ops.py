@@ -1,93 +1,181 @@
-"""Jit'd dispatch wrappers over the Pallas kernels.
+"""Public kernel ops — thin wrappers over the dispatch registry.
 
-``mode``:
-  auto      — Pallas on TPU, jnp reference elsewhere (CPU dev / dry-run:
-              the lowered HLO of the reference has equivalent roofline terms,
-              see EXPERIMENTS.md §Roofline notes)
-  pallas    — compiled Pallas (TPU)
-  interpret — Pallas body interpreted in Python (CPU correctness tests)
-  ref       — pure-jnp oracle
+Every op registers up to four backends in ``kernels.dispatch``:
+
+  ref              — pure-jnp oracle (CPU default)
+  chunked          — kernel-equivalent jnp program under a ``KERNEL_`` named
+                     scope (dry-run roofline lowering; the HLO of these
+                     regions stands in for the Pallas kernel, see
+                     launch.hlo_analysis)
+  pallas_interpret — the real Pallas kernel body interpreted on CPU
+                     ("interpret" is accepted as an alias)
+  pallas           — compiled Pallas (TPU default)
+
+Selection: explicit ``mode=`` > ``dispatch.using(...)`` scope >
+``REPRO_KERNEL_<OP>`` / ``REPRO_KERNELS`` env > cached autotune winner >
+platform default. ``mode=None`` and ``mode="auto"`` both mean
+"dispatch decides"; see kernels/dispatch.py.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels import ref as _ref
-from repro.kernels import flash_attention as _fa
-from repro.kernels import ssd as _ssd
-from repro.kernels import gae_scan as _gae
-from repro.kernels import pack as _pack
-from repro.kernels import quant_matmul as _qmm
-from repro.kernels import flash_decode as _fd
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _resolve(mode: str) -> str:
-    if mode == "auto":
-        return "pallas" if _on_tpu() else "ref"
-    return mode
+# The Pallas kernel modules are optional: a JAX build without pallas (or
+# with incompatible API drift beyond what kernels.compat shims) still
+# serves every op through ``ref``/``chunked``.
+try:
+    from repro.kernels import flash_attention as _fa
+    from repro.kernels import ssd as _ssd
+    from repro.kernels import gae_scan as _gae
+    from repro.kernels import pack as _pack
+    from repro.kernels import quant_matmul as _qmm
+    from repro.kernels import flash_decode as _fd
+    HAS_PALLAS_KERNELS = True
+except ImportError:   # pragma: no cover — exercised only without pallas
+    HAS_PALLAS_KERNELS = False
 
 
 # "KERNEL_" named scopes mark regions whose HLO stands in for a Pallas kernel
 # during CPU dry-run lowering: launch.hlo_analysis excludes their *internal*
 # HBM traffic (VMEM-resident on the real TPU kernel) while keeping their
 # FLOPs. Inputs/outputs are still counted by the unmarked neighbor ops.
+# Scopes are created fresh per call — jax.named_scope context managers are
+# single-use (the mlp_apply reuse bug class; see tests/test_dispatch.py).
 
 
-def flash_attention(q, k, v, causal: bool = True, mode: str = "auto",
+# -- flash_attention ----------------------------------------------------------
+
+@dispatch.register("flash_attention", dispatch.REF)
+def _fa_ref(q, k, v, *, causal=True, block_q=128, block_k=128):
+    return _ref.flash_attention(q, k, v, causal=causal)
+
+
+@dispatch.register("flash_attention", dispatch.CHUNKED)
+def _fa_chunked(q, k, v, *, causal=True, block_q=128, block_k=128):
+    with jax.named_scope("KERNEL_flash"):
+        return _ref.flash_attention_chunked(q, k, v, causal=causal)
+
+
+# -- ssd ----------------------------------------------------------------------
+
+@dispatch.register("ssd", dispatch.REF)
+def _ssd_ref(x, dt, A, B_, C, *, chunk=128):
+    return _ref.ssd(x, dt, A, B_, C)
+
+
+@dispatch.register("ssd", dispatch.CHUNKED)
+def _ssd_chunked(x, dt, A, B_, C, *, chunk=128):
+    with jax.named_scope("KERNEL_ssd"):
+        return _ref.ssd_chunked(x, dt, A, B_, C, chunk=chunk)
+
+
+# -- gae ----------------------------------------------------------------------
+
+def _gae_ref(rewards, values, dones, last_value, gamma, lam, *, block_t=128):
+    with jax.named_scope("KERNEL_gae"):
+        return _ref.gae(rewards, values, dones, last_value, gamma, lam)
+
+
+dispatch.register("gae", dispatch.REF)(_gae_ref)
+dispatch.register("gae", dispatch.CHUNKED)(_gae_ref)
+
+
+# -- pack ---------------------------------------------------------------------
+
+@dispatch.register("pack", dispatch.REF)
+def _pack_ref(leaves):
+    return _ref.pack(leaves)
+
+
+# -- quant_matmul -------------------------------------------------------------
+
+def _qmm_ref(x, w_q, scale):
+    with jax.named_scope("KERNEL_qmm"):
+        return _ref.quant_matmul(x, w_q, scale)
+
+
+dispatch.register("quant_matmul", dispatch.REF)(_qmm_ref)
+dispatch.register("quant_matmul", dispatch.CHUNKED)(_qmm_ref)
+
+
+# -- flash_decode -------------------------------------------------------------
+
+def _fd_ref(q, k, v, length, *, block_s=512):
+    with jax.named_scope("KERNEL_flash_decode"):
+        return _ref.flash_decode(q, k, v, length)
+
+
+dispatch.register("flash_decode", dispatch.REF)(_fd_ref)
+dispatch.register("flash_decode", dispatch.CHUNKED)(_fd_ref)
+
+
+# -- Pallas backends (interpret + compiled share one body per op) -------------
+
+if HAS_PALLAS_KERNELS:
+
+    def _pallas_pair(op, fn):
+        """Register ``fn(*a, interpret=...)`` as both the interpret-mode CI
+        backend and the compiled TPU backend of ``op``."""
+        import functools
+        dispatch.register(op, dispatch.INTERPRET)(
+            functools.partial(fn, interpret=True))
+        dispatch.register(op, dispatch.PALLAS, requires_tpu=True)(
+            functools.partial(fn, interpret=False))
+
+    _pallas_pair("flash_attention",
+                 lambda q, k, v, *, causal=True, block_q=128, block_k=128,
+                 interpret: _fa.flash_attention(
+                     q, k, v, causal=causal, block_q=block_q,
+                     block_k=block_k, interpret=interpret))
+    _pallas_pair("ssd",
+                 lambda x, dt, A, B_, C, *, chunk=128, interpret:
+                 _ssd.ssd(x, dt, A, B_, C, chunk=chunk, interpret=interpret))
+    _pallas_pair("gae",
+                 lambda rewards, values, dones, last_value, gamma, lam, *,
+                 block_t=128, interpret: _gae.gae(
+                     rewards, values, dones, last_value, gamma, lam,
+                     block_t=block_t, interpret=interpret))
+    _pallas_pair("pack",
+                 lambda leaves, *, interpret:
+                 _pack.pack(leaves, interpret=interpret))
+    _pallas_pair("quant_matmul",
+                 lambda x, w_q, scale, *, interpret:
+                 _qmm.quant_matmul(x, w_q, scale, interpret=interpret))
+    _pallas_pair("flash_decode",
+                 lambda q, k, v, length, *, block_s=512, interpret:
+                 _fd.flash_decode(q, k, v, length, block_s=block_s,
+                                  interpret=interpret))
+
+
+# -- public ops ---------------------------------------------------------------
+
+def flash_attention(q, k, v, causal: bool = True, mode: str = None,
                     block_q: int = 128, block_k: int = 128):
-    m = _resolve(mode)
-    if m == "ref":
-        return _ref.flash_attention(q, k, v, causal=causal)
-    if m == "chunked":   # kernel-equivalent jnp program (dry-run lowering)
-        with jax.named_scope("KERNEL_flash"):
-            return _ref.flash_attention_chunked(q, k, v, causal=causal)
-    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                               block_k=block_k, interpret=(m == "interpret"))
+    return dispatch.call("flash_attention", q, k, v, mode=mode,
+                         causal=causal, block_q=block_q, block_k=block_k)
 
 
-def ssd(x, dt, A, B_, C, chunk: int = 128, mode: str = "auto"):
-    m = _resolve(mode)
-    if m == "ref":
-        return _ref.ssd(x, dt, A, B_, C)
-    if m == "chunked":
-        with jax.named_scope("KERNEL_ssd"):
-            return _ref.ssd_chunked(x, dt, A, B_, C, chunk=chunk)
-    return _ssd.ssd(x, dt, A, B_, C, chunk=chunk, interpret=(m == "interpret"))
+def ssd(x, dt, A, B_, C, chunk: int = 128, mode: str = None):
+    return dispatch.call("ssd", x, dt, A, B_, C, mode=mode, chunk=chunk)
 
 
 def gae(rewards, values, dones, last_value, gamma: float, lam: float,
-        mode: str = "auto", block_t: int = 128):
-    m = _resolve(mode)
-    if m in ("ref", "chunked"):
-        with jax.named_scope("KERNEL_gae"):
-            return _ref.gae(rewards, values, dones, last_value, gamma, lam)
-    return _gae.gae(rewards, values, dones, last_value, gamma, lam,
-                    block_t=block_t, interpret=(m == "interpret"))
+        mode: str = None, block_t: int = 128):
+    return dispatch.call("gae", rewards, values, dones, last_value,
+                         gamma, lam, mode=mode, block_t=block_t)
 
 
-def pack(leaves, mode: str = "auto"):
-    m = _resolve(mode)
-    if m == "ref":
-        return _ref.pack(leaves)
-    return _pack.pack(leaves, interpret=(m == "interpret"))
+def pack(leaves, mode: str = None):
+    return dispatch.call("pack", leaves, mode=mode)
 
 
-def quant_matmul(x, w_q, scale, mode: str = "auto"):
-    m = _resolve(mode)
-    if m in ("ref", "chunked"):
-        with jax.named_scope("KERNEL_qmm"):
-            return _ref.quant_matmul(x, w_q, scale)
-    return _qmm.quant_matmul(x, w_q, scale, interpret=(m == "interpret"))
+def quant_matmul(x, w_q, scale, mode: str = None):
+    return dispatch.call("quant_matmul", x, w_q, scale, mode=mode)
 
 
-def flash_decode(q, k, v, length, mode: str = "auto", block_s: int = 512):
-    m = _resolve(mode)
-    if m in ("ref", "chunked"):
-        with jax.named_scope("KERNEL_flash_decode"):
-            return _ref.flash_decode(q, k, v, length)
-    return _fd.flash_decode(q, k, v, length, block_s=block_s,
-                            interpret=(m == "interpret"))
+def flash_decode(q, k, v, length, mode: str = None, block_s: int = 512):
+    return dispatch.call("flash_decode", q, k, v, length, mode=mode,
+                         block_s=block_s)

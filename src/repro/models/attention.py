@@ -10,6 +10,10 @@ Three entry points:
   * ``attend_decode`` — one new token against a KV cache (context-parallel
     capable: for long_500k the cache's sequence dim is sharded over "data"
     and GSPMD all-reduces the softmax statistics).
+
+Kernel selection goes through the kernels.dispatch registry; ``kernel=None``
+(the default) lets the registry pick per platform / env override /
+``dispatch.using(...)`` scope. Passing an explicit name still wins.
 """
 from __future__ import annotations
 
@@ -81,7 +85,7 @@ def _project_qkv(params, x, cfg: ModelConfig, positions):
 
 
 def attend_full(params, x, cfg: ModelConfig, tp: int,
-                positions=None, kernel: str = "auto"):
+                positions=None, kernel: str = None):
     """Causal self-attention over a full sequence. x: (B, T, d)."""
     B, T, _ = x.shape
     if positions is None:
@@ -96,7 +100,7 @@ def attend_full(params, x, cfg: ModelConfig, tp: int,
 
 
 def attend_prefill(params, x, cfg: ModelConfig, tp: int, cache: KVCache,
-                   kernel: str = "auto"):
+                   kernel: str = None):
     """Full-sequence attention that also fills the KV cache."""
     B, T, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))

@@ -94,16 +94,16 @@ def make_mlp_spec(cfg: ModelConfig, d_ff: int = 0, stack: tuple = ()):
 
 
 def mlp_apply(params, x, cfg: ModelConfig):
-    qscope = (jax.named_scope("KERNEL_qmm") if "wi_scale" in params
-              else jax.named_scope("mlp"))
+    # jax.named_scope context managers are single-use: build one per `with`
+    scope = "KERNEL_qmm" if "wi_scale" in params else "mlp"
     wi = weight(params, "wi", ("embed", "mlp")).astype(cfg.dtype)
     wo = weight(params, "wo", ("mlp", "embed")).astype(cfg.dtype)
-    with qscope:
+    with jax.named_scope(scope):
         h = jnp.einsum("...d,df->...f", x, wi)
     gate, up = jnp.split(h, 2, axis=-1)
     act = jax.nn.silu(gate) if cfg.mlp_activation == "silu" \
         else jax.nn.gelu(gate, approximate=True)
     h = act * up
     h = constrain(h, "batch", "null", "mlp") if h.ndim == 3 else h
-    with qscope:
+    with jax.named_scope(scope):
         return jnp.einsum("...f,fd->...d", h, wo)

@@ -89,17 +89,16 @@ def moe_apply(params, x, cfg: ModelConfig, deterministic: bool = True):
     # expert FFN (SwiGLU) — EP: E sharded over "model". When quantized the
     # dequant+dot pair lowers as one fused W4/W8 matmul (kernels/quant_matmul
     # on TPU; KERNEL_qmm-scoped jnp stand-in for the dry-run).
-    import jax as _jax
-    qscope = (_jax.named_scope("KERNEL_qmm") if "wi_scale" in params
-              else _jax.named_scope("moe_ffn"))
+    # jax.named_scope context managers are single-use: build one per `with`
+    scope = "KERNEL_qmm" if "wi_scale" in params else "moe_ffn"
     wi = weight(params, "wi", ("expert", "embed", "mlp"))
-    with qscope:
+    with jax.named_scope(scope):
         h = jnp.einsum("gecd,edf->gecf", ebuf, wi.astype(dt))
     g, u = jnp.split(h, 2, axis=-1)
     act = jax.nn.silu(g) if cfg.mlp_activation == "silu" \
         else jax.nn.gelu(g, approximate=True)
     wo = weight(params, "wo", ("expert", "mlp", "embed"))
-    with qscope:
+    with jax.named_scope(scope):
         y = jnp.einsum("gecf,efd->gecd", act * u, wo.astype(dt))
     y = constrain(y, "batch", "expert", "null", "null")
 

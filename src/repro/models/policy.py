@@ -136,8 +136,10 @@ class BackbonePolicy:
     """Any assigned architecture as a token-level policy: actions are
     next-token choices, the critic reads the same final hidden state."""
 
-    def __init__(self, cfg: ModelConfig, tp: int = 1, kernel: str = "auto",
+    def __init__(self, cfg: ModelConfig, tp: int = 1, kernel: str = None,
                  quantize: bool = False):
+        # kernel=None → backend per kernels.dispatch (platform/env/scope);
+        # an explicit name ("ref", "chunked", "interpret", "pallas") wins
         self.cfg, self.tp, self.kernel = cfg, tp, kernel
         self.quantize = quantize     # int8 weights (serving path)
         self.nvec = (cfg.vocab_size,)

@@ -68,7 +68,7 @@ def _expand_groups(b, cfg):
     return jnp.repeat(b, H // G, axis=-2)
 
 
-def ssm_apply(params, x, cfg: ModelConfig, kernel: str = "auto",
+def ssm_apply(params, x, cfg: ModelConfig, kernel: str = None,
               return_cache: bool = False):
     """Full-sequence SSD. x: (B, T, d_model) → (B, T, d_model).
     With ``return_cache`` also returns the SSMCache a decode loop continues

@@ -102,7 +102,7 @@ def _embed_inputs(params, inputs, cfg: ModelConfig):
 ACT_RULES = {"batch": "data", "embed_act": None, "null": None}
 
 
-def _period_body_full(cfg: ModelConfig, tp: int, kernel: str):
+def _period_body_full(cfg: ModelConfig, tp: int, kernel: str = None):
     period = stack_period(cfg)
 
     def body(x, pparams):
@@ -128,8 +128,10 @@ def _period_body_full(cfg: ModelConfig, tp: int, kernel: str):
 
 
 def forward(params, inputs, cfg: ModelConfig, tp: int = 1,
-            kernel: str = "auto"):
-    """Full-sequence forward. Returns (hidden (B,T,d), aux dict)."""
+            kernel: str = None):
+    """Full-sequence forward. Returns (hidden (B,T,d), aux dict).
+    ``kernel=None`` defers backend choice to the kernels.dispatch registry
+    (platform default / env override / ``dispatch.using`` scope)."""
     x = _embed_inputs(params, inputs, cfg)
     body = _period_body_full(cfg, tp, kernel)
     body = _remat(body, cfg)
@@ -178,7 +180,7 @@ def init_caches(cfg: ModelConfig, tp: int, batch: int, max_len: int) -> Caches:
 
 
 def prefill(params, inputs, cfg: ModelConfig, tp: int = 1, max_len: int = 0,
-            kernel: str = "auto"):
+            kernel: str = None):
     """Forward + cache build. Returns (hidden, caches)."""
     x = _embed_inputs(params, inputs, cfg)
     B, T, _ = x.shape

@@ -9,6 +9,10 @@ paper singles out as the common bug).
 LM path: one PPO update on a (B, T) token rollout — the paper's actor/learner
 loop at datacenter scale. GAE runs the Pallas kernel; policy terms use the
 chunked-vocab loss; AdamW states stay ZeRO-sharded.
+
+Kernel backends (GAE, flash attention, …) come from the kernels.dispatch
+registry: ``kernel_mode``/``gae_mode`` of ``None`` means the registry picks
+(Pallas on TPU, ref on CPU, env/``dispatch.using`` overrides respected).
 """
 from __future__ import annotations
 
@@ -41,7 +45,7 @@ def init_train_state(params, state_dtype=jnp.float32) -> TrainState:
 # =============================== Ocean =======================================
 
 def make_ocean_update(policy, step_fn, tcfg: TrainConfig, dist,
-                      num_envs: int, kernel_mode: str = "auto"):
+                      num_envs: int, kernel_mode: str = None):
     """Returns jit-able ``update(ts, rollout_carry, key)``. ``dist`` is a
     distributions.Dist (categorical or gaussian)."""
     T = tcfg.unroll_length
@@ -160,7 +164,7 @@ def lm_batch_fields(cfg: ModelConfig, batch_size: int, seq_len: int):
 
 
 def make_lm_train_step(policy, tcfg: TrainConfig, total_steps: int = 10_000,
-                       gae_mode: str = "auto", loss_chunk: int = 256,
+                       gae_mode: str = None, loss_chunk: int = 256,
                        num_microbatches: int = 1):
     """One PPO update on a token rollout — the train_4k dry-run program.
 

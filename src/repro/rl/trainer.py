@@ -24,7 +24,7 @@ from repro.rl.rollout import RolloutCarry
 class Trainer:
     def __init__(self, env, tcfg: TrainConfig = None, hidden: int = 128,
                  recurrent: bool = False, seed: int = 0,
-                 kernel_mode: str = "auto", log_dir: str = None):
+                 kernel_mode: str = None, log_dir: str = None):
         from repro.utils.metrics import MetricsLogger
         self.logger = MetricsLogger(log_dir,
                                     run_name=type(env).__name__.lower())
