@@ -175,6 +175,10 @@ class TrainConfig:
     num_envs: int = 64
     pool_buffers: int = 2            # EnvPool double buffering (M = buffers*N)
 
+    # training engine (rl/engine.py)
+    updates_per_launch: int = 1      # K: fused updates per host dispatch
+    engine_backend: str = "jit"      # jit | shard_map | pool
+
     # fault tolerance
     checkpoint_every: int = 100
     checkpoint_dir: str = "/tmp/repro_ckpt"

@@ -44,11 +44,11 @@ class Pool:
         for b in range(num_buffers):
             state, obs = self.vec.init(jax.random.fold_in(key, b))
             self._states.append(state)
-            nan = jnp.zeros((self.batch_size,), jnp.float32)
+            zero_rew = jnp.zeros((self.batch_size,), jnp.float32)
             done = jnp.zeros((self.batch_size if self.vec.num_agents > 1
                               else num_envs,), jnp.bool_)
             info = jax.vmap(lambda _: empty_info())(jnp.arange(num_envs))
-            self._pending.append((obs, nan, done, info))
+            self._pending.append((obs, zero_rew, done, info))
         self._cursor = 0
         self._key = jax.random.fold_in(key, 997)
         self._awaiting = [False] * num_buffers
@@ -63,16 +63,25 @@ class Pool:
         return obs, rew, done, info, b
 
     def send(self, actions, buf: Optional[int] = None):
-        """Dispatch the step for buffer ``buf`` and advance the cursor. The
-        step is queued, not awaited — overlap happens here."""
-        b = self._cursor if buf is None else buf
+        """Dispatch the step for the awaited buffer and advance the cursor.
+        The step is queued, not awaited — overlap happens here.
+
+        The cursor always advances from its own value, never from ``buf``:
+        recv() only ever hands out the cursor buffer, so the one awaited
+        buffer IS the cursor buffer, and a caller passing a stale ``buf``
+        from an older recv() must not be able to skew the round-robin."""
+        b = self._cursor
+        if buf is not None and buf != b:
+            raise ValueError(
+                f"send(buf={buf}) does not match the awaited buffer {b}; "
+                f"pass the buf returned by the matching recv()")
         assert self._awaiting[b], "send() without recv()"
         self._key, sub = jax.random.split(self._key)
         state, obs, rew, done, info = self.vec.step(self._states[b], actions, sub)
         self._states[b] = state
         self._pending[b] = (obs, rew, done, info)
         self._awaiting[b] = False
-        self._cursor = (b + 1) % self.num_buffers
+        self._cursor = (self._cursor + 1) % self.num_buffers
 
     # convenience for synchronous use / tests
     def step(self, actions):

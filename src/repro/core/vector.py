@@ -112,6 +112,28 @@ class VecEnv:
         return (state, self._flatten_agents(obs), self._flatten_rew(rew),
                 self._broadcast_done(done), info)
 
+    # step as a pure function for use inside jit/scan (no host logic),
+    # taking one explicit key per env. Shapes are derived from the inputs
+    # (not self.num_envs) so the same function works on a per-device shard
+    # inside shard_map — the TrainEngine's data-parallel tier relies on this.
+    def step_keyed_fn(self):
+        step1 = self._step1
+        A = self.num_agents
+
+        def f(state, actions, keys):
+            n = keys.shape[0]
+            if A > 1:
+                actions = jax.tree.map(
+                    lambda x: x.reshape((n, A) + x.shape[1:]), actions)
+            state, obs, rew, done, info = jax.vmap(step1)(state, actions, keys)
+            if A > 1:
+                obs = jax.tree.map(
+                    lambda x: x.reshape((n * A,) + x.shape[2:]), obs)
+                rew = rew.reshape((n * A,))
+                done = jnp.repeat(done, A)
+            return state, obs, rew, done, info
+        return f
+
     # step as a pure function for use inside jit/scan (no host logic)
     def step_fn(self):
         step1 = self._step1

@@ -37,6 +37,30 @@ def named(mesh: Mesh, pspec_tree):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+# -- Ocean data-parallel (TrainEngine shard_map tier) --------------------------
+
+def data_axes(mesh: Mesh) -> tuple:
+    """The mesh axes Ocean PPO data-parallelizes over (envs + batch)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def ocean_batch_spec(mesh: Mesh) -> P:
+    """PartitionSpec sharding a leading env/batch dim over the data axes.
+    Used as a pytree prefix for the whole RolloutCarry (every leaf of env
+    state, obs, policy carry, and done mask is env-major)."""
+    axes = data_axes(mesh)
+    if not axes:
+        return P()
+    return P(axes if len(axes) > 1 else axes[0])
+
+
 # -- train state ---------------------------------------------------------------
 
 def train_state_pspecs(policy, rules: dict) -> TrainState:

@@ -16,6 +16,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ocean", default=None,
                     help="ocean env name or 'all'")
+    ap.add_argument("--engine-backend", default="jit",
+                    choices=("jit", "shard_map", "pool"),
+                    help="TrainEngine tier for --ocean runs")
+    ap.add_argument("--updates-per-launch", "-K", type=int, default=1,
+                    help="fused updates per host dispatch (engine K)")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config for --arch")
@@ -48,7 +53,9 @@ def main():
         names = list(OCEAN) if args.ocean == "all" else [args.ocean]
         tcfg = TrainConfig(num_envs=64, unroll_length=64, update_epochs=4,
                            num_minibatches=4, learning_rate=1e-3, gamma=0.95,
-                           checkpoint_dir=args.ckpt_dir)
+                           checkpoint_dir=args.ckpt_dir,
+                           engine_backend=args.engine_backend,
+                           updates_per_launch=args.updates_per_launch)
         for name in names:
             recurrent = (name == "memory")
             tr = Trainer(OCEAN[name](), tcfg, hidden=64, recurrent=recurrent,

@@ -82,8 +82,10 @@ class OceanPolicy:
     def initial_carry(self, batch: int):
         if not self.recurrent:
             return None
-        z = jnp.zeros((batch, self.hidden), jnp.float32)
-        return (z, z)
+        # two distinct buffers: the engine donates the whole carry to its
+        # fused launch, and XLA rejects donating one buffer twice
+        return (jnp.zeros((batch, self.hidden), jnp.float32),
+                jnp.zeros((batch, self.hidden), jnp.float32))
 
     # paper §3.4 split ---------------------------------------------------------
     def encode(self, params, obs):

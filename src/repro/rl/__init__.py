@@ -1,4 +1,6 @@
-from repro.rl import distributions, ppo, rollout, learner, actor, trainer
+from repro.rl import distributions, ppo, rollout, learner, engine, actor, \
+    trainer
 from repro.rl.learner import TrainState, init_train_state, \
-    make_ocean_update, make_lm_train_step, lm_batch_fields
+    make_ocean_update, make_ocean_learn, make_lm_train_step, lm_batch_fields
+from repro.rl.engine import TrainEngine, METRIC_KEYS
 from repro.rl.trainer import Trainer

@@ -1,0 +1,368 @@
+"""Device-resident TrainEngine: K fused PPO updates per host dispatch.
+
+The paper's trajectory is IPC-count reduction — per-step → per-episode → (in
+this JAX port) zero host syncs inside one update. This module takes the last
+step: zero host round-trips per *K updates*. One launch is a single
+``jax.lax.scan`` over the fused update with donated ``TrainState`` /
+``RolloutCarry`` buffers, and metrics land in an on-device ring buffer of
+shape ``(K, n_metrics)`` that is fetched once per launch — dispatch latency
+and host sync amortize K-fold, which is exactly what dominates the
+small-unroll Ocean regime the paper benchmarks.
+
+Three execution tiers behind one ``run(total_steps)`` API:
+
+  * ``jit``       — single device; K = 1 is the classic one-update-per-
+                    dispatch loop, K > 1 the fused multi-update scan.
+  * ``shard_map`` — data-parallel over the mesh's data axes (envs and PPO
+                    batch sharded, gradients pmean'd, advantage stats
+                    psum'd). Randomness is keyed by *global* env index and
+                    minibatch permutations are drawn per shard-block, so an
+                    S-device run is seed-matched with the single-device
+                    ``num_shards=S`` emulation (same final params up to
+                    float reduction order). Testable on CPU via
+                    ``--xla_force_host_platform_device_count``.
+  * ``pool``      — the double-buffered async host loop (core/pool.py) for
+                    host-bound envs: while the learner consumes buffer i,
+                    buffer i+1's env step is already on the device queue.
+
+Checkpointing, ``target_score`` early-exit, and metric logging are host
+callbacks that fire at launch boundaries.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+from repro.core.vector import VecEnv
+from repro.distributed import sharding as shd
+from repro.rl.learner import (TrainState, init_train_state, make_ocean_learn,
+                              make_ocean_update)
+from repro.rl.rollout import RolloutCarry, Trajectory
+
+
+METRIC_KEYS = ("loss", "pg_loss", "v_loss", "entropy", "approx_kl",
+               "clipfrac", "grad_norm", "score", "episode_return", "episodes")
+
+
+def pack_metrics(m: dict) -> jax.Array:
+    """Metrics dict → one f32 row of the on-device ring buffer."""
+    return jnp.stack([jnp.asarray(m[k], jnp.float32) for k in METRIC_KEYS])
+
+
+def unpack_metrics(row) -> dict:
+    return {k: float(v) for k, v in zip(METRIC_KEYS, row)}
+
+
+def _scan_launch(update, k: int):
+    """K sequential updates as one traced program; returns the (K, n_metrics)
+    metrics ring alongside the threaded state."""
+    def launch(ts: TrainState, rc: RolloutCarry, key):
+        def body(carry, uk):
+            ts, rc = carry
+            ts, rc, m = update(ts, rc, uk)
+            return (ts, rc), pack_metrics(m)
+        (ts, rc), ring = jax.lax.scan(body, (ts, rc),
+                                      jax.random.split(key, k))
+        return ts, rc, ring
+    return launch
+
+
+class TrainEngine:
+    """Owns the device-resident training state and the launch programs.
+
+    ``env`` is a (usually ``Emulated``) pure-functional env; ``policy`` an
+    OceanPolicy; ``dist`` a distributions.Dist. ``key`` seeds params
+    (fold_in 0), env states (fold_in 1), and the per-launch update keys.
+
+    ``num_shards`` (jit tier only) emulates the S-way block structure of a
+    data-parallel run on one device — used by the seed-match parity tests;
+    leave at 1 for normal training.
+    """
+
+    def __init__(self, env, policy, tcfg: TrainConfig, dist, *, key,
+                 backend: str = None, updates_per_launch: int = None,
+                 mesh: Optional[Mesh] = None, kernel_mode: str = None,
+                 num_shards: int = 1):
+        self.env, self.policy, self.tcfg, self.dist = env, policy, tcfg, dist
+        self.backend = backend or tcfg.engine_backend
+        self.K = updates_per_launch or tcfg.updates_per_launch
+        if self.backend not in ("jit", "shard_map", "pool"):
+            raise ValueError(f"unknown engine backend {self.backend!r}; "
+                             f"expected jit | shard_map | pool")
+        if self.K < 1:
+            raise ValueError(f"updates_per_launch must be >= 1, got {self.K}")
+        self.key = key
+        self.mesh = mesh
+        self._launches = {}
+
+        self.ts = init_train_state(policy.init(jax.random.fold_in(key, 0)))
+
+        if self.backend != "shard_map" and mesh is not None:
+            raise ValueError(f"mesh is only meaningful for the shard_map "
+                             f"tier, not backend={self.backend!r}")
+        if self.backend == "pool":
+            if self.K != 1:
+                raise ValueError(
+                    f"updates_per_launch={self.K} is a fused-scan knob; the "
+                    f"pool tier dispatches one update per trajectory (K=1)")
+            from repro.core.pool import Pool
+            self.pool = Pool(env, tcfg.num_envs,
+                             num_buffers=tcfg.pool_buffers,
+                             key=jax.random.fold_in(key, 1))
+            self.vec = self.pool.vec
+            self.rc = None
+            self.num_shards = 1
+            self._learn = jax.jit(make_ocean_learn(
+                policy, tcfg, dist, kernel_mode=kernel_mode))
+            self._act = jax.jit(self._make_act())
+            self._boot = jax.jit(self._make_bootstrap())
+            return
+
+        self.vec = VecEnv(env, tcfg.num_envs)
+        env_state, obs = self.vec.init(jax.random.fold_in(key, 1))
+        B = self.vec.batch_size
+        self.rc = RolloutCarry(env_state, obs, policy.initial_carry(B),
+                               jnp.zeros((B,), jnp.bool_))
+
+        if self.backend == "shard_map":
+            if num_shards != 1:
+                raise ValueError("num_shards is derived from the mesh on "
+                                 "the shard_map tier; pass a mesh instead")
+            if self.mesh is None:
+                from repro.launch.mesh import make_mesh
+                self.mesh = make_mesh((jax.device_count(),), ("data",))
+            axes = shd.data_axes(self.mesh)
+            if not axes:
+                raise ValueError(
+                    f"mesh {self.mesh.axis_names} has no data axes "
+                    f"('pod'/'data') to shard Ocean PPO over")
+            S = shd.dp_size(self.mesh)
+            if self.vec.num_envs % S:
+                raise ValueError(
+                    f"num_envs={self.vec.num_envs} not divisible by the "
+                    f"mesh data-parallel size {S}")
+            self._axis = axes if len(axes) > 1 else axes[0]
+            self._rc_spec = shd.ocean_batch_spec(self.mesh)
+            self.num_shards = S
+            self._update = make_ocean_update(
+                policy, self.vec.step_keyed_fn(), tcfg, dist,
+                self.vec.num_envs // S, kernel_mode=kernel_mode,
+                axis_name=self._axis, num_shards=S, keyed_step=True)
+            # place state once: params/opt replicated, env batch sharded
+            self.ts = jax.device_put(self.ts,
+                                     NamedSharding(self.mesh, P()))
+            self.rc = jax.device_put(self.rc,
+                                     NamedSharding(self.mesh, self._rc_spec))
+        else:
+            if num_shards < 1 or self.vec.num_envs % num_shards:
+                raise ValueError(
+                    f"num_envs={self.vec.num_envs} not divisible by "
+                    f"num_shards={num_shards}: the S-block emulation would "
+                    f"silently drop the tail envs from every minibatch")
+            self.num_shards = num_shards
+            self._update = make_ocean_update(
+                policy, self.vec.step_keyed_fn(), tcfg, dist,
+                self.vec.num_envs, kernel_mode=kernel_mode,
+                num_shards=num_shards, keyed_step=True)
+
+    # -- program cache ---------------------------------------------------------
+    def _launch_for(self, k: int):
+        """The compiled k-update launch (cached; at most two sizes per run —
+        K and the tail). State buffers are donated: the launch consumes its
+        inputs and the engine only ever holds the newest generation."""
+        if k not in self._launches:
+            fn = _scan_launch(self._update, k)
+            if self.backend == "shard_map":
+                fn = shard_map(fn, mesh=self.mesh,
+                               in_specs=(P(), self._rc_spec, P()),
+                               out_specs=(P(), self._rc_spec, P()),
+                               check_rep=False)
+            self._launches[k] = jax.jit(fn, donate_argnums=(0, 1))
+        return self._launches[k]
+
+    def update_keys(self, key, k: int = None):
+        """Per-update keys of one launch keyed by ``key`` — exposed so the
+        fused-vs-sequential parity test can replay the exact schedule."""
+        return jax.random.split(key, k or self.K)
+
+    # -- state management (checkpoint restore) ---------------------------------
+    def set_train_state(self, ts: TrainState):
+        if self.backend == "shard_map":
+            ts = jax.device_put(ts, NamedSharding(self.mesh, P()))
+        self.ts = ts
+
+    @property
+    def batch_size(self) -> int:
+        return self.vec.batch_size
+
+    @property
+    def steps_per_update(self) -> int:
+        return self.tcfg.unroll_length * self.vec.batch_size
+
+    # -- the unified run loop --------------------------------------------------
+    def run(self, total_steps: int, *, target_score: Optional[float] = None,
+            on_update: Optional[Callable] = None,
+            on_launch: Optional[Callable] = None):
+        """Train until env interactions ≥ total_steps (or solved).
+
+        Returns ``(history, solved)``: per-update metric dicts (with
+        ``env_steps``/``sps``) and the metrics of the solving update (or
+        None). ``on_update(u, metrics)`` fires per update once its launch's
+        ring is fetched; ``on_launch(updates_dispatched)`` fires right after
+        each dispatch (host-side, no device sync) — checkpoint hooks go
+        there. With ``target_score`` set, every launch is drained eagerly so
+        the check happens at each launch boundary; otherwise the engine
+        keeps one launch in flight and fetches the ring one launch late, so
+        JAX async dispatch overlaps host work with device compute.
+        """
+        if self.backend == "pool":
+            return self._run_pool(total_steps, target_score=target_score,
+                                  on_update=on_update, on_launch=on_launch)
+        spu = self.steps_per_update
+        num_updates = max(1, total_steps // spu)
+        history, pending, solved = [], deque(), None
+        t0 = time.perf_counter()
+
+        def drain_one():
+            nonlocal solved
+            u0, kk, ring = pending.popleft()
+            rows = np.asarray(jax.device_get(ring))
+            elapsed = time.perf_counter() - t0
+            for i in range(kk):
+                md = unpack_metrics(rows[i])
+                md["env_steps"] = (u0 + i + 1) * spu
+                md["sps"] = md["env_steps"] / elapsed
+                history.append(md)
+                if on_update is not None:
+                    on_update(u0 + i, md)
+                if (target_score is not None and solved is None
+                        and md["episodes"] > 0
+                        and md["score"] >= target_score):
+                    solved = md
+
+        u = 0
+        while u < num_updates:
+            k = min(self.K, num_updates - u)
+            self.key, sub = jax.random.split(self.key)
+            self.ts, self.rc, ring = self._launch_for(k)(self.ts, self.rc,
+                                                         sub)
+            pending.append((u, k, ring))
+            u += k
+            if on_launch is not None:
+                on_launch(u)
+            if target_score is not None:
+                while pending:
+                    drain_one()
+                if solved is not None:
+                    break
+            elif len(pending) > 1:
+                drain_one()
+        while pending:
+            drain_one()
+        return history, solved
+
+    # -- pool tier -------------------------------------------------------------
+    def _make_act(self):
+        policy, dist = self.policy, self.dist
+
+        def act(params, obs, carry, reset, key):
+            logits, value, pc = policy.step(params, obs, carry, reset=reset)
+            action = dist.sample(key, logits)
+            logp = dist.log_prob(logits, action)
+            return action, logp, value, pc
+        return act
+
+    def _make_bootstrap(self):
+        policy = self.policy
+
+        def boot(params, obs, carry, reset):
+            _, value, _ = policy.step(params, obs, carry, reset=reset)
+            return value
+        return boot
+
+    def _run_pool(self, total_steps, *, target_score=None, on_update=None,
+                  on_launch=None):
+        """Host loop over the double-buffered pool. The trajectory for each
+        buffer accumulates as in-flight device arrays; when a buffer reaches
+        T steps its update runs while the other buffers' env steps stay
+        queued on the device — the paper's EnvPool overlap, learner edition.
+        """
+        tcfg, pool = self.tcfg, self.pool
+        T, B = tcfg.unroll_length, pool.batch_size
+        spu = T * B
+        num_updates = max(1, total_steps // spu)
+        nb = pool.num_buffers
+        carry = [self.policy.initial_carry(B) for _ in range(nb)]
+        carry0 = [self.policy.initial_carry(B) for _ in range(nb)]
+        recs = [[] for _ in range(nb)]
+        history, pending, solved = [], deque(), None
+        t0 = time.perf_counter()
+
+        def drain_one():
+            # fetch one update's metrics (blocks only on that update's learn,
+            # not on later dispatched work)
+            nonlocal solved
+            uu, m = pending.popleft()
+            md = {k: float(v) for k, v in
+                  zip(METRIC_KEYS, jax.device_get([m[k] for k in
+                                                   METRIC_KEYS]))}
+            md["env_steps"] = (uu + 1) * spu
+            md["sps"] = md["env_steps"] / (time.perf_counter() - t0)
+            history.append(md)
+            if on_update is not None:
+                on_update(uu, md)
+            if (target_score is not None and solved is None
+                    and md["episodes"] > 0 and md["score"] >= target_score):
+                solved = md
+
+        u = 0
+        while u < num_updates and solved is None:
+            obs, rew, done, info, b = pool.recv()
+            if recs[b]:
+                recs[b][-1] = recs[b][-1] + (rew, done, info)
+            if len(recs[b]) == T and len(recs[b][-1]) == 8:
+                last_value = self._boot(self.ts.params, obs, carry[b], done)
+                cols = list(zip(*recs[b]))
+                st = lambda xs: jnp.stack(xs)
+                traj = Trajectory(
+                    obs=st(cols[0]), actions=st(cols[1]),
+                    logprobs=st(cols[2]), values=st(cols[3]),
+                    rewards=st(cols[5]), dones=st(cols[6]),
+                    resets=st(cols[4]),
+                    infos=jax.tree.map(lambda *x: jnp.stack(x), *cols[7]))
+                self.key, kp = jax.random.split(self.key)
+                self.ts, m = self._learn(self.ts, carry0[b], traj,
+                                         last_value, kp)
+                carry0[b] = carry[b]
+                recs[b] = []
+                pending.append((u, m))
+                u += 1
+                if on_launch is not None:
+                    on_launch(u)
+                # sync each update only when early-exit needs the score;
+                # otherwise stay one update behind so the learn and the other
+                # buffers' env steps keep the device queue full
+                if target_score is not None:
+                    while pending:
+                        drain_one()
+                elif len(pending) > 1:
+                    drain_one()
+            # act before checking solved so the recv'd buffer is always
+            # sent back — the pool stays reusable after an early exit
+            self.key, ka = jax.random.split(self.key)
+            action, logp, value, pc = self._act(self.ts.params, obs,
+                                                carry[b], done, ka)
+            recs[b].append((obs, action, logp, value, done))
+            carry[b] = pc
+            pool.send(action, b)
+        while pending:
+            drain_one()
+        return history, solved

@@ -44,19 +44,55 @@ def init_train_state(params, state_dtype=jnp.float32) -> TrainState:
 
 # =============================== Ocean =======================================
 
-def make_ocean_update(policy, step_fn, tcfg: TrainConfig, dist,
-                      num_envs: int, kernel_mode: str = None):
-    """Returns jit-able ``update(ts, rollout_carry, key)``. ``dist`` is a
-    distributions.Dist (categorical or gaussian)."""
-    T = tcfg.unroll_length
-    E, M = tcfg.update_epochs, tcfg.num_minibatches
+def _shard_index(axis_name):
+    """Global shard index over (possibly multiple) data axes, row-major."""
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    idx = jnp.zeros((), jnp.int32)
+    for a in names:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
 
-    def update(ts: TrainState, rc: RolloutCarry, key):
-        k_roll, k_perm = jax.random.split(key)
-        carry0 = rc.policy_carry
-        rc, traj, last_value = rollout(policy, ts.params, step_fn, rc,
-                                       k_roll, T, dist)
-        B = traj.rewards.shape[1]
+
+def _check_divisible(n, M, num_envs, num_minibatches, unroll_length, what):
+    if n % M != 0:
+        raise ValueError(
+            f"{what} ({n}) is not divisible by num_minibatches="
+            f"{num_minibatches} (num_envs={num_envs}, "
+            f"num_minibatches={num_minibatches}, "
+            f"unroll_length={unroll_length}); pick num_envs / unroll_length "
+            f"so each PPO minibatch has the same size")
+
+
+def make_ocean_learn(policy, tcfg: TrainConfig, dist,
+                     kernel_mode: str = None, axis_name=None,
+                     num_shards: int = 1):
+    """The post-rollout half of the fused update: GAE → minibatched
+    clipped-PPO epochs. Returns jit-able
+    ``learn(ts, carry0, traj, last_value, key) → (ts, metrics)``.
+
+    Factored out of ``make_ocean_update`` so the TrainEngine's pool tier
+    (host-collected trajectories) reuses the exact same learning math as the
+    fused jit / shard_map tiers.
+
+    ``axis_name`` — set when running inside ``shard_map``: ``traj`` then
+    holds this device's env shard, minibatch permutations are drawn per
+    shard, gradients/stats are pmean'd and advantage normalization uses
+    global (psum) statistics.
+
+    ``num_shards`` — the S of the data-parallel layout. With
+    ``axis_name=None`` and S > 1 the single device *emulates* the S-way
+    block structure: envs are permuted within S contiguous blocks and global
+    minibatch m is the union of every block's m-th slice. That makes the
+    update semantically identical (up to float reduction order) whether it
+    runs on 1 device or S — the seed-matched multi-device parity the
+    engine's tests and benchmark rely on.
+    """
+    E, M = tcfg.update_epochs, tcfg.num_minibatches
+    S = num_shards
+
+    def learn(ts: TrainState, carry0, traj: Trajectory, last_value, key):
+        T, B = traj.rewards.shape                       # local shapes
+        B_global = B * (S if axis_name is not None else 1)
 
         adv = kops.gae(traj.rewards.T, traj.values.T, traj.dones.T,
                        last_value, tcfg.gamma, tcfg.gae_lambda,
@@ -65,8 +101,9 @@ def make_ocean_update(policy, step_fn, tcfg: TrainConfig, dist,
 
         if policy.recurrent:
             # minibatch over envs; recompute through full sequences
-            mb_size = B // M
-            assert mb_size * M == B
+            n_block = B if axis_name is not None else B // S
+            _check_divisible(n_block, M, B_global, M, T,
+                             f"envs per data shard ({S} shards)")
 
             def loss_fn(params, idx):
                 obs = traj.obs[:, idx]
@@ -77,14 +114,16 @@ def make_ocean_update(policy, step_fn, tcfg: TrainConfig, dist,
                     traj.resets[:, idx])
                 newlogp = dist.log_prob(logits, traj.actions[:, idx])
                 ent = dist.entropy(logits)
-                a = ppo.normalize_adv(adv[:, idx], tcfg.norm_adv)
+                a = ppo.normalize_adv(adv[:, idx], tcfg.norm_adv, axis_name)
                 pg, kl, cf = ppo.ppo_terms(newlogp, traj.logprobs[:, idx],
                                            a, tcfg)
                 vl = ppo.value_loss(newv, traj.values[:, idx],
                                     returns[:, idx], tcfg)
                 loss = pg - tcfg.ent_coef * jnp.mean(ent) + tcfg.vf_coef * vl
                 return loss, ppo.PPOStats(pg, vl, jnp.mean(ent), kl, cf)
-            perm_n = B
+
+            n_loc = n_block
+            to_global = lambda p, s: s * n_block + p
         else:
             flat = jax.tree.map(
                 lambda x: x.reshape((T * B,) + x.shape[2:]),
@@ -92,22 +131,31 @@ def make_ocean_update(policy, step_fn, tcfg: TrainConfig, dist,
                            traj.rewards, traj.dones, traj.resets, {}))
             flat_adv = adv.reshape(-1)
             flat_ret = returns.reshape(-1)
-            mb_size = (T * B) // M
+            n_block = B if axis_name is not None else B // S
+            _check_divisible(T * n_block, M, B_global, M, T,
+                             f"samples per data shard ({S} shards)")
 
             def loss_fn(params, idx):
                 logits, newv, _ = policy.step(params, flat.obs[idx], None)
                 newlogp = dist.log_prob(logits, flat.actions[idx])
                 ent = dist.entropy(logits)
-                a = ppo.normalize_adv(flat_adv[idx], tcfg.norm_adv)
+                a = ppo.normalize_adv(flat_adv[idx], tcfg.norm_adv, axis_name)
                 pg, kl, cf = ppo.ppo_terms(newlogp, flat.logprobs[idx], a, tcfg)
                 vl = ppo.value_loss(newv, flat.values[idx], flat_ret[idx], tcfg)
                 loss = pg - tcfg.ent_coef * jnp.mean(ent) + tcfg.vf_coef * vl
                 return loss, ppo.PPOStats(pg, vl, jnp.mean(ent), kl, cf)
-            perm_n = T * B
+
+            n_loc = T * n_block
+            # block-local flat index (t * n_block + e) → global (t * B + env)
+            to_global = lambda p, s: ((p // n_block) * B + s * n_block
+                                      + p % n_block)
 
         def mb_step(ts: TrainState, idx):
             (loss, stats), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(ts.params, idx)
+            if axis_name is not None:
+                grads = jax.lax.pmean(grads, axis_name)
+                loss, stats = jax.lax.pmean((loss, stats), axis_name)
             params, opt, gstats = adamw.update(
                 grads, ts.opt, ts.params, lr=tcfg.learning_rate,
                 b1=tcfg.adam_b1, b2=tcfg.adam_b2, eps=tcfg.adam_eps,
@@ -116,16 +164,31 @@ def make_ocean_update(policy, step_fn, tcfg: TrainConfig, dist,
             ts = TrainState(params, opt, ts.step + 1)
             return ts, (loss, stats, gstats["grad_norm"])
 
-        # epochs × minibatches of shuffled indices, one scan
+        # epochs × minibatches of shuffled indices, one scan. Per-block keys
+        # (fold_in of the shard index) keep the index stream identical
+        # between a real S-device run and the single-device S-block emulation.
         def epoch_perm(k):
-            return jax.random.permutation(k, perm_n).reshape(M, mb_size)
+            if axis_name is not None:
+                s = _shard_index(axis_name)
+                p = jax.random.permutation(jax.random.fold_in(k, s), n_loc)
+                return p.reshape(M, n_loc // M)
+            if S == 1:
+                return jax.random.permutation(k, n_loc).reshape(M, n_loc // M)
+            blocks = []
+            for s in range(S):
+                p = jax.random.permutation(jax.random.fold_in(k, s), n_loc)
+                blocks.append(to_global(p, s).reshape(M, n_loc // M))
+            return jnp.concatenate(blocks, axis=1)
+
         idxs = jnp.concatenate(
-            [epoch_perm(jax.random.fold_in(k_perm, e)) for e in range(E)])
+            [epoch_perm(jax.random.fold_in(key, e)) for e in range(E)])
         ts, (losses, stats, gnorms) = jax.lax.scan(mb_step, ts, idxs)
 
         # episode stats from infos (paper: aggregate once per episode)
+        psum = ((lambda x: jax.lax.psum(x, axis_name))
+                if axis_name is not None else (lambda x: x))
         valid = traj.infos["valid"]
-        nv = jnp.maximum(1.0, jnp.sum(valid))
+        nv = jnp.maximum(1.0, psum(jnp.sum(valid)))
         metrics = {
             "loss": losses[-1],
             "pg_loss": stats.pg_loss[-1],
@@ -134,10 +197,44 @@ def make_ocean_update(policy, step_fn, tcfg: TrainConfig, dist,
             "approx_kl": stats.approx_kl[-1],
             "clipfrac": stats.clipfrac[-1],
             "grad_norm": gnorms[-1],
-            "score": jnp.sum(traj.infos["score"] * valid) / nv,
-            "episode_return": jnp.sum(traj.infos["episode_return"] * valid) / nv,
-            "episodes": jnp.sum(valid),
+            "score": psum(jnp.sum(traj.infos["score"] * valid)) / nv,
+            "episode_return":
+                psum(jnp.sum(traj.infos["episode_return"] * valid)) / nv,
+            "episodes": psum(jnp.sum(valid)),
         }
+        return ts, metrics
+
+    return learn
+
+
+def make_ocean_update(policy, step_fn, tcfg: TrainConfig, dist,
+                      num_envs: int, kernel_mode: str = None,
+                      axis_name=None, num_shards: int = 1,
+                      keyed_step: bool = False):
+    """Returns jit-able ``update(ts, rollout_carry, key)``. ``dist`` is a
+    distributions.Dist (categorical or gaussian).
+
+    ``keyed_step`` — ``step_fn`` takes per-env keys (``step_keyed_fn``) and
+    the rollout derives them from global env indices; required for the
+    shard-invariant randomness of the engine's shard_map tier (``num_envs``
+    is then the *local* env count of one shard).
+    """
+    T = tcfg.unroll_length
+    learn = make_ocean_learn(policy, tcfg, dist, kernel_mode=kernel_mode,
+                             axis_name=axis_name, num_shards=num_shards)
+
+    def update(ts: TrainState, rc: RolloutCarry, key):
+        k_roll, k_perm = jax.random.split(key)
+        carry0 = rc.policy_carry
+        if keyed_step:
+            off = (_shard_index(axis_name) * num_envs
+                   if axis_name is not None else jnp.zeros((), jnp.int32))
+            keyed = (num_envs, off)
+        else:
+            keyed = None
+        rc, traj, last_value = rollout(policy, ts.params, step_fn, rc,
+                                       k_roll, T, dist, keyed=keyed)
+        ts, metrics = learn(ts, carry0, traj, last_value, k_perm)
         return ts, rc, metrics
 
     return update

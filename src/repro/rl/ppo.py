@@ -51,10 +51,19 @@ def value_loss(new_v, old_v, returns, tcfg: TrainConfig):
     return 0.5 * jnp.mean(vl)
 
 
-def normalize_adv(adv, enabled: bool):
+def normalize_adv(adv, enabled: bool, axis_name=None):
+    """Minibatch advantage normalization. Under data-parallel shard_map the
+    minibatch is split across devices, so the stats must be computed over the
+    *global* minibatch (psum) — normalizing per-shard would silently change
+    the objective vs the single-device run. adv is constant w.r.t. params, so
+    cross-device stats keep per-shard gradients exact."""
     if not enabled:
         return adv
-    return (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+    if axis_name is None:
+        return (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+    m = jax.lax.pmean(jnp.mean(adv), axis_name)
+    var = jax.lax.pmean(jnp.mean(jnp.square(adv - m)), axis_name)
+    return (adv - m) / (jnp.sqrt(var) + 1e-8)
 
 
 def chunked_token_loss(backbone_params, hidden, actions, old_logp, adv,

@@ -35,17 +35,42 @@ class RolloutCarry(NamedTuple):
 
 
 def rollout(policy, params, step_fn, carry: RolloutCarry, key,
-            unroll: int, dist):
+            unroll: int, dist, keyed=None):
     """Returns (carry', Trajectory, last_value (B,)). ``dist`` is a
-    distributions.Dist (categorical or gaussian — paper §8 extension)."""
+    distributions.Dist (categorical or gaussian — paper §8 extension).
+
+    ``keyed``: None → legacy randomness (one key per step, split per env
+    inside ``step_fn``). Otherwise ``(num_envs, env_offset)``: per-env keys
+    derived from the *global* env index ``env_offset + arange(num_envs)``,
+    and ``step_fn`` must accept ``(state, actions, keys)`` with one key per
+    env (``VecEnv.step_keyed_fn``). This makes the rollout bitwise
+    independent of how envs are sharded across devices — device d of an
+    S-way data-parallel run passes ``env_offset = d * (B // S)`` and draws
+    exactly the keys the single-device run draws for those envs.
+    """
 
     def one(c: RolloutCarry, k):
         k_act, k_env = jax.random.split(k)
         logits, value, pc = policy.step(params, c.obs, c.policy_carry,
                                         reset=c.done_prev)
-        action = dist.sample(k_act, logits)
-        logp = dist.log_prob(logits, action)
-        env_state, obs, rew, done, info = step_fn(c.env_state, action, k_env)
+        if keyed is None:
+            action = dist.sample(k_act, logits)
+            logp = dist.log_prob(logits, action)
+            env_state, obs, rew, done, info = step_fn(c.env_state, action,
+                                                      k_env)
+        else:
+            num_envs, off = keyed
+            batch = logits.shape[0]
+            agents = batch // num_envs
+            act_idx = off * agents + jnp.arange(batch)
+            act_keys = jax.vmap(lambda i: jax.random.fold_in(k_act, i))(
+                act_idx)
+            action = jax.vmap(dist.sample)(act_keys, logits)
+            logp = dist.log_prob(logits, action)
+            env_keys = jax.vmap(lambda i: jax.random.fold_in(k_env, i))(
+                off + jnp.arange(num_envs))
+            env_state, obs, rew, done, info = step_fn(c.env_state, action,
+                                                      env_keys)
         out = Trajectory(c.obs, action, logp, value, rew, done,
                          c.done_prev, info)
         return RolloutCarry(env_state, obs, pc, done), out

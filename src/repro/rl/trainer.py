@@ -1,12 +1,17 @@
 """Host-side training driver: Ocean / small-env PPO with checkpoint-restart.
 
-Composes the whole paper stack: Emulated(env) → VecEnv → OceanPolicy →
-fused update, plus fault tolerance (atomic checkpoints, resume) and the
-paper's per-experiment recurrence toggle.
+Now a thin facade over ``rl.engine.TrainEngine`` — the engine owns the
+device-resident state, the fused K-updates-per-dispatch launch, and the
+execution tier (jit / shard_map / pool); the Trainer keeps the stable
+user-facing API (construction from a raw env, ``train``, ``save``/
+``restore``, history, logging) that tests, examples, and the CLI use.
+
+The old per-update ``{k: float(v)}`` host sync is gone: metrics are fetched
+with one ``jax.device_get`` per launch, one launch late when no
+``target_score`` is requested, so JAX async dispatch actually overlaps.
 """
 from __future__ import annotations
 
-import time
 from typing import Optional
 
 import jax
@@ -14,24 +19,23 @@ import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig
 from repro.core.emulation import Emulated
-from repro.core.vector import VecEnv
 from repro.models.policy import OceanPolicy
 from repro.rl.distributions import Dist
-from repro.rl.learner import TrainState, init_train_state, make_ocean_update
-from repro.rl.rollout import RolloutCarry
+from repro.rl.engine import TrainEngine
+from repro.rl.learner import TrainState
 
 
 class Trainer:
     def __init__(self, env, tcfg: TrainConfig = None, hidden: int = 128,
                  recurrent: bool = False, seed: int = 0,
-                 kernel_mode: str = None, log_dir: str = None):
+                 kernel_mode: str = None, log_dir: str = None,
+                 backend: str = None, updates_per_launch: int = None,
+                 mesh=None):
         from repro.utils.metrics import MetricsLogger
         self.logger = MetricsLogger(log_dir,
                                     run_name=type(env).__name__.lower())
         self.tcfg = tcfg or TrainConfig()
-        self.key = jax.random.PRNGKey(seed)
         self.em = Emulated(env)
-        self.vec = VecEnv(self.em, self.tcfg.num_envs)
         if self.em.act_spec.kind == "discrete":
             self.dist = Dist("categorical", nvec=self.em.act_spec.nvec)
         else:   # continuous actions — paper §8 extension
@@ -39,49 +43,63 @@ class Trainer:
         self.policy = OceanPolicy(self.em.obs_spec.total, self.dist.nvec,
                                   hidden=hidden, recurrent=recurrent,
                                   num_outputs=self.dist.num_outputs)
-        params = self.policy.init(jax.random.fold_in(self.key, 0))
-        self.ts = init_train_state(params)
-
-        env_state, obs = self.vec.init(jax.random.fold_in(self.key, 1))
-        B = self.vec.batch_size
-        self.rc = RolloutCarry(env_state, obs,
-                               self.policy.initial_carry(B),
-                               jnp.zeros((B,), jnp.bool_))
-        self._update = jax.jit(make_ocean_update(
-            self.policy, self.vec.step_fn(), self.tcfg, self.dist,
-            self.tcfg.num_envs, kernel_mode=kernel_mode))
+        self.engine = TrainEngine(self.em, self.policy, self.tcfg, self.dist,
+                                  key=jax.random.PRNGKey(seed),
+                                  backend=backend,
+                                  updates_per_launch=updates_per_launch,
+                                  mesh=mesh, kernel_mode=kernel_mode)
         self.history = []
+
+    # engine state, exposed under the historical names ------------------------
+    @property
+    def ts(self) -> TrainState:
+        return self.engine.ts
+
+    @property
+    def rc(self):
+        return self.engine.rc
+
+    @property
+    def vec(self):
+        return self.engine.vec
 
     @property
     def steps_per_update(self) -> int:
-        return self.tcfg.unroll_length * self.vec.batch_size
+        return self.engine.steps_per_update
 
     def train(self, total_steps: int, log_every: int = 0,
               target_score: Optional[float] = None,
               checkpoint_dir: Optional[str] = None):
-        """Run until total env interactions ≥ total_steps (or solved)."""
-        num_updates = max(1, total_steps // self.steps_per_update)
-        t0 = time.perf_counter()
-        for u in range(num_updates):
-            self.key, sub = jax.random.split(self.key)
-            self.ts, self.rc, metrics = self._update(self.ts, self.rc, sub)
-            metrics = {k: float(v) for k, v in metrics.items()}
-            metrics["env_steps"] = (u + 1) * self.steps_per_update
-            metrics["sps"] = metrics["env_steps"] / (time.perf_counter() - t0)
-            self.history.append(metrics)
-            self.logger.log(metrics["env_steps"], metrics)
+        """Run until total env interactions ≥ total_steps (or solved).
+        ``target_score`` and checkpointing are engine callbacks checked at
+        launch boundaries (identical to per-update for K = 1)."""
+        ce = self.tcfg.checkpoint_every
+        saved_through = [0]
+        pending_log = []
+
+        def on_update(u, m):
+            self.history.append(m)
+            pending_log.append(m)
+            if len(pending_log) >= self.engine.K:   # one write per launch
+                self.logger.log_batch(pending_log)
+                pending_log.clear()
             if log_every and (u % log_every == 0):
-                print(f"  upd {u:4d} steps {metrics['env_steps']:7d} "
-                      f"score {metrics['score']:.3f} "
-                      f"ret {metrics['episode_return']:.3f} "
-                      f"kl {metrics['approx_kl']:.4f} "
-                      f"sps {metrics['sps']:.0f}")
-            if checkpoint_dir and (u + 1) % self.tcfg.checkpoint_every == 0:
+                print(f"  upd {u:4d} steps {m['env_steps']:7d} "
+                      f"score {m['score']:.3f} "
+                      f"ret {m['episode_return']:.3f} "
+                      f"kl {m['approx_kl']:.4f} "
+                      f"sps {m['sps']:.0f}")
+
+        def on_launch(updates_done):
+            if checkpoint_dir and updates_done // ce > saved_through[0] // ce:
                 self.save(checkpoint_dir)
-            if target_score is not None and metrics["episodes"] > 0 \
-                    and metrics["score"] >= target_score:
-                return metrics
-        return self.history[-1]
+                saved_through[0] = updates_done
+
+        _, solved = self.engine.run(total_steps, target_score=target_score,
+                                    on_update=on_update, on_launch=on_launch)
+        if pending_log:
+            self.logger.log_batch(pending_log)
+        return solved if solved is not None else self.history[-1]
 
     def save(self, ckpt_dir: str):
         from repro.checkpoint import ckpt
@@ -93,4 +111,5 @@ class Trainer:
         tree = ckpt.restore(ckpt_dir, {"params": self.ts.params,
                                        "opt": self.ts.opt,
                                        "step": self.ts.step})
-        self.ts = TrainState(tree["params"], tree["opt"], tree["step"])
+        self.engine.set_train_state(
+            TrainState(tree["params"], tree["opt"], tree["step"]))

@@ -19,7 +19,7 @@ class MetricsLogger:
             self._f = open(self.path, "a")
         self._t0 = time.time()
 
-    def log(self, step: int, metrics: dict):
+    def log(self, step: int, metrics: dict, flush: bool = True):
         if self._f is None:
             return
         rec = {"step": int(step), "wall_s": round(time.time() - self._t0, 3)}
@@ -29,6 +29,17 @@ class MetricsLogger:
             except (TypeError, ValueError):
                 pass
         self._f.write(json.dumps(rec) + "\n")
+        if flush:
+            self._f.flush()
+
+    def log_batch(self, records):
+        """One write + flush for a whole launch of per-update metric dicts
+        (each carrying its own ``env_steps``) — the host-side counterpart of
+        the engine's once-per-launch metrics fetch."""
+        if self._f is None:
+            return
+        for rec in records:
+            self.log(int(rec.get("env_steps", 0)), rec, flush=False)
         self._f.flush()
 
     def close(self):

@@ -78,6 +78,22 @@ def test_pool_recv_send_protocol():
         pool.recv()   # recv twice without send
 
 
+def test_pool_send_stale_buf_rejected():
+    """An out-of-order buf must not skew the round-robin cursor: send()
+    advances from the internal cursor and rejects a mismatched buf."""
+    pool = Pool(Emulated(Bandit()), 2, num_buffers=3)
+    act = jnp.zeros((2, 1), jnp.int32)
+    *_, b0 = pool.recv()
+    pool.send(act, b0)
+    *_, b1 = pool.recv()
+    assert (b0, b1) == (0, 1)
+    with pytest.raises(ValueError, match="awaited buffer"):
+        pool.send(act, buf=b0)          # stale buf from the older recv
+    pool.send(act, b1)                  # correct buf still works
+    *_, b2 = pool.recv()
+    assert b2 == 2                      # cursor un-skewed
+
+
 def test_autotune_runs():
     results, best = autotune(Emulated(Bandit()), 4, steps=8)
     assert set(results) == {"serial", "vmap"}
