@@ -1,26 +1,22 @@
-"""End-to-end driver: train the whole Ocean suite (paper §4) — every env
-solved >0.9 with one barely-tuned config, under a coffee break total.
+"""End-to-end driver: train the whole Ocean suite (paper §4 + Ocean II) —
+every env solved >0.9 with its committed preset, under a coffee break total.
 
   PYTHONPATH=src python examples/train_ocean_suite.py
 """
 import time
 
-from repro.configs.base import TrainConfig
+from repro.configs.ocean import ocean_tcfg, preset
 from repro.envs.ocean import OCEAN
 from repro.rl.trainer import Trainer
-
-TCFG = TrainConfig(num_envs=64, unroll_length=64, update_epochs=4,
-                   num_minibatches=4, learning_rate=1e-3, gamma=0.95)
-BUDGET = {"squared": 300_000, "password": 300_000, "stochastic": 200_000,
-          "memory": 500_000, "multiagent": 150_000, "spaces": 200_000,
-          "bandit": 150_000, "continuous": 400_000}
 
 t_all = time.perf_counter()
 results = {}
 for name, cls in OCEAN.items():
     t0 = time.perf_counter()
-    tr = Trainer(cls(), TCFG, hidden=64, recurrent=(name == "memory"))
-    m = tr.train(BUDGET[name], target_score=0.9)
+    p = preset(name)
+    tr = Trainer(cls(), ocean_tcfg(name, updates_per_launch=4),
+                 hidden=p.hidden, recurrent=p.recurrent, conv=p.conv)
+    m = tr.train(p.total_steps, target_score=p.target_score)
     results[name] = m
     print(f"{name:12s} {'SOLVED' if m['score'] >= 0.9 else 'FAILED':6s} "
           f"score={m['score']:.3f} steps={m['env_steps']:7d} "

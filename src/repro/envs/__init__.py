@@ -1,2 +1,3 @@
 from repro.envs import base, ocean
 from repro.envs.ocean import OCEAN, make
+from repro.envs.conformance import ConformanceReport, check_env

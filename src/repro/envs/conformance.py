@@ -1,0 +1,493 @@
+"""Env-conformance harness: the machine-checkable definition of "plays nice".
+
+The paper's thesis (§3–4) is that one emulation layer lets arbitrary envs run
+unchanged through the same training stack. This module pins down the protocol
+that claim rests on and verifies it for any env — ours or a user's:
+
+  jit_purity        — init/reset/step trace under jit, don't retrace on a
+                      second same-shaped call, and lower with no host
+                      callbacks in the jaxpr.
+  vmap_purity       — step/reset vmap cleanly (the VecEnv fused path).
+  stability         — obs/reward/done/info shapes and dtypes are identical
+                      at every step (static shapes are what lets the whole
+                      unroll live in one XLA program).
+  determinism       — step is a pure function of (state, action, key):
+                      same inputs ⇒ bitwise-identical outputs.
+  emulation         — emulate∘unemulate is the identity on observations
+                      (f32 and bytes modes) and actions, so the Emulated
+                      wrapper loses nothing.
+  agent_axis        — multi-agent envs are agent-major with a leading
+                      num_agents axis on obs/reward and an episode-scoped
+                      scalar done.
+  autoreset         — under VecEnv the env episodes terminate within the
+                      declared horizon, infos carry valid end-of-episode
+                      rows, and stepping continues cleanly past resets.
+  procgen_keys      — envs whose layout depends on the reset key actually
+                      get fresh layouts across episodes (a stale key in the
+                      autoreset path is invisible to every other check).
+  score_bounds      — episode scores are normalized to [0, 1] with exact
+                      info dtypes, so "score > 0.9 ⇒ solved" is comparable
+                      across the whole registry.
+
+Library API: ``check_env(env_or_name) -> ConformanceReport``. The pytest
+suite (tests/test_conformance.py) parametrizes this over the OCEAN registry;
+env authors point it at their own class the same way.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spaces as sp
+from repro.core import emulation as em
+from repro.core.vector import VecEnv
+
+
+@dataclass
+class CheckResult:
+    name: str
+    ok: bool
+    violations: tuple = ()           # human-readable strings, empty when ok
+
+
+@dataclass
+class ConformanceReport:
+    env_name: str
+    results: list = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return all(r.ok for r in self.results)
+
+    @property
+    def violations(self) -> list:
+        return [f"{r.name}: {v}" for r in self.results for v in r.violations]
+
+    def summary(self) -> str:
+        lines = [f"conformance report — {self.env_name}: "
+                 f"{'OK' if self.ok else 'VIOLATIONS'}"]
+        for r in self.results:
+            lines.append(f"  [{'pass' if r.ok else 'FAIL'}] {r.name}")
+            for v in r.violations:
+                lines.append(f"         - {v}")
+        return "\n".join(lines)
+
+    __str__ = summary
+
+
+# ---------------------------------------------------------------------------
+# helpers
+
+def _horizon(env) -> int:
+    return int(getattr(env, "horizon", getattr(env, "length", 64)))
+
+
+def _sample_action(env, key):
+    a = sp.sample(env.action_space, key)
+    if env.num_agents > 1:
+        a = jax.tree.map(
+            lambda x: jnp.stack([x] * env.num_agents), a)
+    return a
+
+
+def _tree_sig(tree):
+    """(path, shape, dtype) signature of a pytree — the stability invariant."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return tuple((jax.tree_util.keystr(p), x.shape, str(x.dtype))
+                 for p, x in leaves)
+
+
+def _trees_equal(a, b) -> bool:
+    return all(bool(jnp.all(x == y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+_CALLBACK_PRIMS = ("pure_callback", "io_callback", "python_callback",
+                   "callback", "debug_callback")
+
+
+def _callback_eqns(jaxpr, found=None):
+    """Recursively collect host-callback primitives in a (closed) jaxpr.
+    Sub-jaxprs hide in params as ClosedJaxpr/Jaxpr values AND in tuples of
+    them (lax.cond's ``branches``), so walk both."""
+    found = [] if found is None else found
+
+    def visit(v):
+        inner = getattr(v, "jaxpr", None)     # ClosedJaxpr → Jaxpr
+        if inner is not None:
+            _callback_eqns(inner, found)
+        elif hasattr(v, "eqns"):              # bare Jaxpr
+            _callback_eqns(v, found)
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                visit(x)
+
+    for eqn in jaxpr.eqns:
+        if any(c in eqn.primitive.name for c in _CALLBACK_PRIMS):
+            found.append(eqn.primitive.name)
+        for v in eqn.params.values():
+            visit(v)
+    return found
+
+
+# ---------------------------------------------------------------------------
+# individual checks — each returns a list of violation strings
+
+def check_jit_purity(env, key) -> list:
+    out = []
+    # trace counters: the wrapped body runs only while tracing, so a second
+    # same-shaped call that retraces (non-hashable statics, host-dependent
+    # control flow, weak-type flapping) bumps the counter past 1
+    counts = {"init": 0, "reset": 0, "step": 0}
+
+    def cinit(k):
+        counts["init"] += 1
+        return env.init(k)
+
+    def creset(s, k):
+        counts["reset"] += 1
+        return env.reset(s, k)
+
+    def cstep(s, a, k):
+        counts["step"] += 1
+        return env.step(s, a, k)
+
+    try:
+        jinit, jreset, jstep = jax.jit(cinit), jax.jit(creset), jax.jit(cstep)
+        s = jinit(key)
+        s = jinit(jax.random.fold_in(key, 1))
+        s, obs = jreset(s, key)
+        s, obs = jreset(s, jax.random.fold_in(key, 2))
+        a = _sample_action(env, key)
+        r1 = jstep(s, a, key)
+        r2 = jstep(r1[0], _sample_action(env, jax.random.fold_in(key, 3)),
+                   jax.random.fold_in(key, 4))
+        jax.block_until_ready(r2[1])
+    except Exception as e:   # noqa: BLE001 — any trace failure is the finding
+        return [f"init/reset/step failed under jit: {type(e).__name__}: {e}"]
+    for name, n in counts.items():
+        if n != 1:
+            out.append(f"{name} retraced on a second same-shaped call "
+                       f"({n} traces); check for non-static host state")
+    try:
+        jaxpr = jax.make_jaxpr(env.step)(s, a, key)
+        cbs = _callback_eqns(jaxpr.jaxpr)
+        if cbs:
+            out.append(f"step lowers with host callbacks {sorted(set(cbs))}; "
+                       f"the fused rollout scan would sync per step")
+    except Exception as e:   # noqa: BLE001
+        out.append(f"step does not abstract-trace: {type(e).__name__}: {e}")
+    return out
+
+
+def check_vmap_purity(env, key, batch: int = 4) -> list:
+    try:
+        keys = jax.random.split(key, batch)
+        states = jax.vmap(env.init)(keys)
+        states, obs = jax.vmap(env.reset)(states, keys)
+        acts = jax.vmap(lambda k: _sample_action(env, k))(keys)
+        states, obs, rew, done, info = jax.vmap(env.step)(states, acts, keys)
+        jax.block_until_ready(obs)
+    except Exception as e:   # noqa: BLE001
+        return [f"env does not vmap: {type(e).__name__}: {e}"]
+    out = []
+    lead = jax.tree.leaves(obs)[0].shape[0]
+    if lead != batch:
+        out.append(f"vmapped obs leading dim {lead} != batch {batch}")
+    return out
+
+
+def check_stability(env, key) -> list:
+    out = []
+    s = env.init(key)
+    s, obs = env.reset(s, key)
+    sig0 = None
+    for t in range(min(_horizon(env), 32)):
+        s, obs, rew, done, info = env.step(
+            s, _sample_action(env, jax.random.fold_in(key, t)),
+            jax.random.fold_in(key, 100 + t))
+        sig = (_tree_sig(obs), _tree_sig(s),
+               (jnp.shape(rew), str(jnp.asarray(rew).dtype)),
+               (jnp.shape(done), str(jnp.asarray(done).dtype)),
+               _tree_sig(info))
+        if sig0 is None:
+            sig0 = sig
+        elif sig != sig0:
+            out.append(f"shape/dtype signature changed at step {t}")
+            break
+        if bool(done):
+            break
+    rew_dtype = jnp.asarray(rew).dtype
+    if not jnp.issubdtype(rew_dtype, jnp.floating):
+        out.append(f"reward dtype {rew_dtype} is not floating")
+    if jnp.asarray(done).dtype != jnp.bool_:
+        out.append(f"done dtype {jnp.asarray(done).dtype} != bool")
+    if jnp.shape(done) != ():
+        out.append(f"done must be an episode-scoped scalar, got shape "
+                   f"{jnp.shape(done)}")
+    for f in ("score", "episode_return", "episode_length", "valid"):
+        if f not in info:
+            out.append(f"info missing required field {f!r}")
+    return out
+
+
+def check_determinism(env, key) -> list:
+    s = env.init(key)
+    s, obs = env.reset(s, key)
+    a = _sample_action(env, key)
+    # deliberately NOT jitted: the jit cache would replay one trace and hide
+    # host-side impurity (a python counter folded into the key, np.random,
+    # time-dependent constants) that a second trace would expose
+    r1 = env.step(s, a, jax.random.fold_in(key, 7))
+    r2 = env.step(s, a, jax.random.fold_in(key, 7))
+    if not _trees_equal(r1, r2):
+        return ["step(state, action, key) is not deterministic: identical "
+                "inputs gave different outputs (host-side randomness?)"]
+    i1 = env.init(key)
+    i2 = env.init(key)
+    if not _trees_equal(i1, i2):
+        return ["init(key) is not deterministic for a fixed key"]
+    return []
+
+
+def check_emulation(env, key) -> list:
+    out = []
+    for mode in ("f32", "bytes"):
+        try:
+            spec = em.flat_spec(env.observation_space, mode)
+            x = sp.sample(env.observation_space, key)
+            back = em.unemulate(spec, em.emulate(spec, x))
+        except Exception as e:   # noqa: BLE001
+            out.append(f"obs emulation ({mode}) failed: "
+                       f"{type(e).__name__}: {e}")
+            continue
+        for p, _ in sp.leaves(env.observation_space):
+            a = np.asarray(sp.get_path(x, p))
+            b = np.asarray(sp.get_path(back, p))
+            exact = mode == "bytes"
+            close = (np.array_equal(a, b) if exact else
+                     np.allclose(a.astype(np.float32),
+                                 b.astype(np.float32), rtol=1e-6))
+            if not close:
+                out.append(f"obs round-trip ({mode}) not identity at "
+                           f"leaf {p}")
+    try:
+        aspec = em.action_spec(env.action_space)
+        a = sp.sample(env.action_space, jax.random.fold_in(key, 1))
+        flat = em.emulate_action(aspec, a)
+        back = em.unemulate_action(aspec, flat)
+        flat2 = em.emulate_action(aspec, back)
+        if not np.allclose(np.asarray(flat), np.asarray(flat2)):
+            out.append("action round-trip emulate∘unemulate∘emulate is not "
+                       "the identity")
+    except Exception as e:   # noqa: BLE001
+        out.append(f"action emulation failed: {type(e).__name__}: {e}")
+    return out
+
+
+def check_agent_axis(env, key) -> list:
+    A = env.num_agents
+    if A == 1:
+        return []
+    out = []
+    s = env.init(key)
+    s, obs = env.reset(s, key)
+    lead = jax.tree.leaves(obs)[0].shape[0]
+    if lead != A:
+        out.append(f"reset obs leading dim {lead} != num_agents {A} "
+                   f"(obs must be agent-major in canonical order)")
+    s, obs, rew, done, info = env.step(s, _sample_action(env, key), key)
+    lead = jax.tree.leaves(obs)[0].shape[0]
+    if lead != A:
+        out.append(f"step obs leading dim {lead} != num_agents {A}")
+    if jnp.shape(rew) != (A,):
+        out.append(f"multi-agent reward shape {jnp.shape(rew)} != ({A},)")
+    return out
+
+
+def _random_vec_actions(vec: VecEnv, key):
+    """Uniform random batch of emulated actions for a VecEnv — each
+    MultiDiscrete component drawn over its own [0, n) range."""
+    space = vec.single_action_space
+    if isinstance(space, sp.MultiDiscrete):
+        return jax.random.randint(key, (vec.batch_size, len(space.nvec)),
+                                  0, jnp.asarray(space.nvec), jnp.int32)
+    return jax.random.uniform(key, (vec.batch_size,) + space.shape,
+                              minval=-1.0, maxval=1.0)
+
+
+def check_autoreset(env, key, num_envs: int = 4) -> list:
+    out = []
+    try:
+        vec = VecEnv(em.Emulated(env), num_envs)
+    except Exception as e:   # noqa: BLE001
+        return [f"env does not wrap under Emulated+VecEnv: "
+                f"{type(e).__name__}: {e}"]
+    state, obs = vec.init(key)
+    H = _horizon(env)
+    dones_seen = 0
+    for t in range(2 * H + 2):
+        k = jax.random.fold_in(key, t)
+        acts = _random_vec_actions(vec, k)
+        state, obs, rew, done, info = vec.step(state, acts, k)
+        if not bool(jnp.all(jnp.isfinite(obs.astype(jnp.float32)))):
+            out.append(f"non-finite observation after autoreset at step {t}")
+            break
+        d = np.asarray(done)
+        v = np.asarray(info["valid"])
+        dones_seen += int(d.sum())
+        # per-env info rows must fire exactly with that env's done
+        env_done = d.reshape(vec.num_envs, vec.num_agents)[:, 0]
+        if not np.array_equal(env_done, v):
+            out.append(f"info['valid'] disagrees with done at step {t}: "
+                       f"episode stats must fire exactly at episode end")
+            break
+        lens = np.asarray(info["episode_length"])[v]
+        if (lens <= 0).any() or (lens > H).any():
+            out.append(f"episode_length outside (0, horizon={H}] at "
+                       f"step {t}: {lens}")
+            break
+    if dones_seen == 0:
+        out.append(f"no episode terminated in {2 * H + 2} random steps "
+                   f"(declared horizon {H})")
+    return out
+
+
+def check_procgen_keys(env, key) -> list:
+    """Layout must follow the key. If ``init`` is key-dependent (procgen
+    env), ``reset`` — the function the autoreset path calls with a fresh key
+    every episode — must thread its key through too: resetting one state
+    with the two keys that made ``init`` differ must give different states.
+    Catches a reset that ignores its key (every episode replays the same
+    layout) without false-flagging envs whose *initial obs* happens to hide
+    the key-dependent state (partial observability), since states, not
+    observations, are compared."""
+    kA, kB = jax.random.fold_in(key, 0), jax.random.fold_in(key, 1)
+    if _trees_equal(env.init(kA), env.init(kB)):
+        return []                    # key-independent init: static env
+    s = env.init(key)
+    s, _ = env.reset(s, key)
+    rA, _ = env.reset(s, kA)
+    rB, _ = env.reset(s, kB)
+    if _trees_equal(rA, rB):
+        return ["init depends on its key but reset ignores its key — the "
+                "procgen key is stale in the autoreset path, so every "
+                "episode would replay the same layout"]
+    rA2, _ = env.reset(s, kA)
+    if not _trees_equal(rA, rA2):
+        return ["reset is not deterministic for a fixed key"]
+    return []
+
+
+def check_score_bounds(env, key, episodes: int = 3) -> list:
+    out = []
+    H = _horizon(env)
+    for e in range(episodes):
+        s = env.init(jax.random.fold_in(key, e))
+        s, obs = env.reset(s, jax.random.fold_in(key, 50 + e))
+        for t in range(10 * H):
+            s, obs, rew, done, info = env.step(
+                s, _sample_action(env, jax.random.fold_in(key, e * 131 + t)),
+                jax.random.fold_in(key, e * 977 + t))
+            if not bool(jnp.all(jnp.isfinite(jnp.asarray(rew, jnp.float32)))):
+                out.append(f"non-finite reward at episode {e} step {t}")
+                return out
+            if bool(done):
+                break
+        else:
+            out.append(f"episode {e} never terminated within 10×horizon")
+            return out
+        score = float(info["score"])
+        if not (0.0 <= score <= 1.0):
+            out.append(f"terminal score {score} outside [0, 1] — scores "
+                       f"must be normalized so 0.9 means solved")
+        if not bool(info["valid"]):
+            out.append(f"info['valid'] false at episode end (episode {e})")
+        if info["score"].dtype != jnp.float32:
+            out.append(f"info['score'] dtype {info['score'].dtype} "
+                       f"!= float32")
+        if info["episode_length"].dtype != jnp.int32:
+            out.append(f"info['episode_length'] dtype "
+                       f"{info['episode_length'].dtype} != int32")
+        if int(info["episode_length"]) != t + 1:
+            out.append(f"episode_length {int(info['episode_length'])} != "
+                       f"actual steps {t + 1}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+CHECKS = {
+    "jit_purity": check_jit_purity,
+    "vmap_purity": check_vmap_purity,
+    "stability": check_stability,
+    "determinism": check_determinism,
+    "emulation": check_emulation,
+    "agent_axis": check_agent_axis,
+    "autoreset": check_autoreset,
+    "procgen_keys": check_procgen_keys,
+    "score_bounds": check_score_bounds,
+}
+
+
+def check_env(env_or_name, *, seed: int = 0,
+              checks: Optional[list] = None) -> ConformanceReport:
+    """Run the conformance suite against an env instance or registry name.
+
+    Returns a ``ConformanceReport``; ``report.ok`` is the machine-checkable
+    "plays nice" verdict, ``report.summary()`` the human one. A check that
+    raises is recorded as a violation, never as a crash — one broken
+    invariant must not mask the others.
+    """
+    if isinstance(env_or_name, str):
+        from repro.envs.ocean import OCEAN
+        name = env_or_name
+        env = OCEAN[name]()
+    else:
+        env = env_or_name
+        name = type(env).__name__
+    key = jax.random.PRNGKey(seed)
+    report = ConformanceReport(env_name=name)
+    for cname in (checks or CHECKS):
+        fn = CHECKS[cname]
+        try:
+            violations = fn(env, key)
+        except Exception as e:   # noqa: BLE001 — report, don't crash
+            violations = [f"check raised {type(e).__name__}: {e}"]
+        report.results.append(
+            CheckResult(cname, not violations, tuple(violations)))
+    return report
+
+
+def run_cli(env_arg: str, seed: int = 0) -> int:
+    """Check 'all' or a comma-separated name list against the registry,
+    print each report, return a process exit code (1 on any violation).
+    Shared by this module's __main__ and ``launch.train --conformance``."""
+    from repro.envs.ocean import OCEAN
+    names = list(OCEAN) if env_arg == "all" \
+        else [n.strip() for n in env_arg.split(",")]
+    bad = 0
+    for name in names:
+        report = check_env(name, seed=seed)
+        print(report.summary())
+        bad += not report.ok
+    return 1 if bad else 0
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Run the env-conformance suite (see envs/conformance.py)")
+    ap.add_argument("env", help="OCEAN registry name(s, comma-separated), "
+                                "or 'all'")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    return run_cli(args.env, seed=args.seed)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,6 +14,20 @@ core; the whole suite is a coffee-break sanity check, never a benchmark.
   Continuous  — Box actions through a Gaussian head (beyond-paper: the
                 paper lists continuous actions as unsupported, §8).
 
+Ocean II (this repo's scenario expansion) — each stresses a distinct code
+path the original eight leave untested:
+
+  Pong        — pixel-grid 2D Box obs through the CNN frontend; catches
+                obs-layout scrambles between emulation and the encoder.
+  Drone       — multi-dim Box actions through the Gaussian head; catches
+                per-component action-dim mixups.
+  TagTeam     — two competing teams with per-team shared reward and
+                padded agent rows (pad_agents); catches team credit
+                assignment and dead-agent masking bugs.
+  Maze        — per-episode procedurally generated layout; catches stale
+                procgen keys through autoreset (every episode must get a
+                fresh maze).
+
 Scores are normalized so "solved" is score > 0.9 (paper: ~30k interactions).
 """
 from __future__ import annotations
@@ -365,3 +379,238 @@ class Continuous:
         return s2, self._obs(s2), reward, done, _end_info(done, ret, t, score)
 
 OCEAN["continuous"] = Continuous
+
+
+# =========================== Ocean II ========================================
+# Scenario expansion: four envs that each stress a code path the original
+# eight leave untested (CNN frontend, multi-dim Gaussian actions, per-team
+# reward + agent padding, per-episode procgen keys through autoreset).
+
+
+class Pong:
+    """Pixel Pong (catch variant): a ball falls from the top row with a fixed
+    per-episode horizontal drift, bouncing off the side walls; a 3-wide paddle
+    on the bottom row moves left/right to catch it. The observation is the
+    raw 2D pixel grid — the one Ocean env whose obs is an image, exercising
+    the CNN frontend end-to-end through emulation (which flattens it) and the
+    policy (which restores it). Score = 1 on catch, 0 on miss."""
+
+    num_agents = 1
+    obs_frontend = "conv"            # Trainer: route through the CNN encoder
+
+    def __init__(self, rows: int = 6, cols: int = 6):
+        assert rows >= 3 and cols >= 3
+        self.rows, self.cols = rows, cols
+        self.horizon = rows - 1      # ball falls one row per step
+        self.observation_space = sp.Box((rows, cols))
+        self.action_space = sp.Discrete(3)       # stay, left, right
+
+    def init(self, key):
+        k_col, k_dx = jax.random.split(key)
+        return {"ball": jnp.stack([jnp.zeros((), jnp.int32),
+                                   jax.random.randint(k_col, (), 0, self.cols)]),
+                "dx": jax.random.randint(k_dx, (), -1, 2).astype(jnp.int32),
+                "paddle": jnp.asarray(self.cols // 2, jnp.int32),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, self._obs(s)
+
+    def _obs(self, s):
+        grid = jnp.zeros((self.rows, self.cols))
+        pad = jnp.clip(s["paddle"] + jnp.arange(-1, 2), 0, self.cols - 1)
+        grid = grid.at[self.rows - 1, pad].set(0.5)
+        return grid.at[s["ball"][0], s["ball"][1]].set(1.0)
+
+    def step(self, state, action, key):
+        moves = jnp.asarray([0, -1, 1])
+        paddle = jnp.clip(state["paddle"] + moves[action], 0, self.cols - 1)
+        # ball falls one row; horizontal drift reflects off the side walls
+        col, dx = state["ball"][1] + state["dx"], state["dx"]
+        bounce = (col < 0) | (col >= self.cols)
+        dx = jnp.where(bounce, -dx, dx)
+        col = jnp.clip(col, 0, self.cols - 1)
+        row = state["ball"][0] + 1
+        t = state["t"] + 1
+        done = row >= self.rows - 1
+        caught = done & (jnp.abs(col - paddle) <= 1)
+        reward = caught.astype(jnp.float32)
+        score = reward
+        s2 = {"ball": jnp.stack([row, col]), "dx": dx, "paddle": paddle,
+              "t": t}
+        return s2, self._obs(s2), reward, done, _end_info(done, reward, t,
+                                                          score)
+
+
+class Drone:
+    """3-D waypoint flight: reach and hover at a random target with a
+    Box((3,)) thrust action — the multi-dim continuous control case
+    (``Continuous`` is 1-D, so a transposed/mixed action component bug is
+    invisible there). Reward per step = max(0, 1 − distance/2);
+    score = return / horizon."""
+
+    num_agents = 1
+
+    def __init__(self, horizon: int = 16, thrust: float = 0.5):
+        self.horizon, self.thrust = horizon, thrust
+        self.observation_space = sp.Box((6,))     # [pos ‖ target]
+        self.action_space = sp.Box((3,), low=-1.0, high=1.0)
+
+    def init(self, key):
+        return {"pos": jnp.zeros((3,)),
+                "target": jax.random.uniform(key, (3,), minval=-0.8,
+                                             maxval=0.8),
+                "t": jnp.zeros((), jnp.int32),
+                "ret": jnp.zeros(())}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, self._obs(s)
+
+    def _obs(self, s):
+        return jnp.concatenate([s["pos"], s["target"]])
+
+    def step(self, state, action, key):
+        a = jnp.clip(jnp.reshape(action, (3,)), -1.0, 1.0)
+        pos = jnp.clip(state["pos"] + self.thrust * a, -1.0, 1.0)
+        reward = jnp.maximum(
+            0.0, 1.0 - 0.5 * jnp.linalg.norm(pos - state["target"]))
+        ret = state["ret"] + reward
+        t = state["t"] + 1
+        done = t >= self.horizon
+        score = jnp.clip(ret / self.horizon, 0.0, 1.0)
+        s2 = {"pos": pos, "target": state["target"], "t": t, "ret": ret}
+        return s2, self._obs(s2), reward, done, _end_info(done, ret, t, score)
+
+
+class TagTeam:
+    """Two competing teams with *per-team* shared reward and padded agent
+    rows. Four live agents (team 0: agents 0–1, team 1: agents 2–3) observe
+    a common signal bit; team 0 must match it, team 1 must play its
+    complement. Each agent's reward is its **team mean** correctness, so any
+    per-agent credit scramble or team mixup pins the score at 0.5. The env
+    declares ``num_agents = 6`` and pads the two dead rows with
+    ``pad_agents`` — exercising the fixed-size agent padding path end to end
+    (padded rows: zero obs, zero reward, excluded from the score)."""
+
+    num_agents = 6
+    LIVE = 4                         # 2 teams × 2 agents; rows 4–5 are padding
+
+    def __init__(self, horizon: int = 8):
+        self.horizon = horizon
+        self.observation_space = sp.Box((4,))    # [team0, team1, signal, live]
+        self.action_space = sp.Discrete(2)
+
+    def init(self, key):
+        return {"signal": jax.random.bernoulli(key).astype(jnp.int32),
+                "t": jnp.zeros((), jnp.int32),
+                "ret": jnp.zeros((self.num_agents,), jnp.float32)}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, self._obs(s)
+
+    def _obs(self, s):
+        from repro.core.emulation import pad_agents
+        team = jnp.asarray([0, 0, 1, 1], jnp.int32)
+        live = jnp.stack([
+            (team == 0).astype(jnp.float32),
+            (team == 1).astype(jnp.float32),
+            jnp.full((self.LIVE,), s["signal"], jnp.float32),
+            jnp.ones((self.LIVE,)),
+        ], axis=-1)                               # (LIVE, 4) agent-major
+        obs, _ = pad_agents(live, jnp.ones((self.LIVE,), bool),
+                            self.num_agents)
+        return obs
+
+    def step(self, state, action, key):
+        live = action[:self.LIVE]
+        want = jnp.asarray([0, 0, 1, 1]) ^ state["signal"]   # team target
+        correct = (live == want).astype(jnp.float32)
+        team_rew = jnp.stack([jnp.mean(correct[:2]), jnp.mean(correct[2:])])
+        reward = jnp.concatenate([jnp.repeat(team_rew, 2),
+                                  jnp.zeros((self.num_agents - self.LIVE,))])
+        ret = state["ret"] + reward
+        t = state["t"] + 1
+        done = t >= self.horizon
+        score = jnp.sum(ret[:self.LIVE]) / (self.LIVE * self.horizon)
+        s2 = {"signal": jax.random.bernoulli(key).astype(jnp.int32),
+              "t": t, "ret": ret}
+        info = _end_info(done, jnp.sum(ret[:self.LIVE]), t, score)
+        return s2, self._obs(s2), reward, done, info
+
+
+class Maze:
+    """Per-episode procedurally generated maze: wall pillars, start, and goal
+    are all drawn from the episode's reset key, so a stale procgen key
+    anywhere in the autoreset path shows up as every episode replaying the
+    same maze. Walls occupy a random subset of the odd-odd "pillar" cells —
+    a layout that can never disconnect the grid (even rows stay fully open),
+    so every maze is solvable. Reward per step is the fraction of the
+    initial Manhattan distance closed; score = fraction closed by episode
+    end ∈ [0, 1] (reaching the goal scores 1 regardless of path taken)."""
+
+    num_agents = 1
+
+    def __init__(self, size: int = 7, horizon: int = 24):
+        assert size % 2 == 1 and size >= 5
+        self.size, self.horizon = size, horizon
+        self.observation_space = sp.Box((size, size))
+        self.action_space = sp.Discrete(5)        # stay, N, S, W, E
+        k = size // 2 + 1                         # even-coordinate grid side
+        cells = jnp.stack(jnp.meshgrid(jnp.arange(k) * 2, jnp.arange(k) * 2,
+                                       indexing="ij"), -1).reshape(-1, 2)
+        self._open_cells = cells                  # never walled
+
+    def init(self, key):
+        k_w, k_s, k_t = jax.random.split(key, 3)
+        p = self.size // 2                        # pillar grid side
+        pillars = jax.random.bernoulli(k_w, 0.5, (p, p))
+        walls = jnp.zeros((self.size, self.size), jnp.bool_)
+        walls = walls.at[1::2, 1::2].set(pillars)
+        n = self._open_cells.shape[0]
+        start = self._open_cells[jax.random.randint(k_s, (), 0, n)]
+        target = self._open_cells[jax.random.randint(k_t, (), 0, n)]
+        d0 = jnp.sum(jnp.abs(start - target))
+        return {"pos": start.astype(jnp.int32),
+                "target": target.astype(jnp.int32),
+                "walls": walls,
+                "d0": d0.astype(jnp.int32),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, self._obs(s)
+
+    def _obs(self, s):
+        grid = jnp.where(s["walls"], 0.25, 0.0)
+        grid = grid.at[s["target"][0], s["target"][1]].set(0.75)
+        return grid.at[s["pos"][0], s["pos"][1]].set(1.0)
+
+    def step(self, state, action, key):
+        g = self.size
+        moves = jnp.asarray([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]])
+        cand = state["pos"] + moves[action]
+        inside = jnp.all((cand >= 0) & (cand < g))
+        blocked = state["walls"][jnp.clip(cand[0], 0, g - 1),
+                                 jnp.clip(cand[1], 0, g - 1)]
+        pos = jnp.where(inside & ~blocked, cand, state["pos"])
+        d_prev = jnp.sum(jnp.abs(state["pos"] - state["target"]))
+        d = jnp.sum(jnp.abs(pos - state["target"]))
+        denom = jnp.maximum(state["d0"], 1).astype(jnp.float32)
+        reward = (d_prev - d).astype(jnp.float32) / denom
+        t = state["t"] + 1
+        done = (d == 0) | (t >= self.horizon)
+        closed = (state["d0"] - d).astype(jnp.float32) / denom
+        score = jnp.clip(jnp.where(state["d0"] == 0, 1.0, closed), 0.0, 1.0)
+        s2 = {"pos": pos, "target": state["target"], "walls": state["walls"],
+              "d0": state["d0"], "t": t}
+        return s2, self._obs(s2), reward, done, _end_info(done, closed, t,
+                                                          score)
+
+
+OCEAN["pong"] = Pong
+OCEAN["drone"] = Drone
+OCEAN["tagteam"] = TagTeam
+OCEAN["maze"] = Maze

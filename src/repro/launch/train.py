@@ -15,7 +15,10 @@ import os
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ocean", default=None,
-                    help="ocean env name or 'all'")
+                    help="ocean env name(s, comma-separated) or 'all'")
+    ap.add_argument("--conformance", action="store_true",
+                    help="run the env-conformance harness on the --ocean "
+                         "env(s) instead of training; exit 1 on violations")
     ap.add_argument("--engine-backend", default="jit",
                     choices=("jit", "shard_map", "pool"),
                     help="TrainEngine tier for --ocean runs")
@@ -25,7 +28,8 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config for --arch")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--total-env-steps", type=int, default=200_000)
+    ap.add_argument("--total-env-steps", type=int, default=0,
+                    help="env-step budget for --ocean (0 → the env preset)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--mesh", default="1x1",
@@ -46,24 +50,29 @@ def main():
     import jax
     import jax.numpy as jnp
 
+    if args.conformance and not args.ocean:
+        ap.error("--conformance requires --ocean <name(s)|all>")
+
     if args.ocean:
         from repro.envs.ocean import OCEAN
         from repro.rl.trainer import Trainer
-        from repro.configs.base import TrainConfig
-        names = list(OCEAN) if args.ocean == "all" else [args.ocean]
-        tcfg = TrainConfig(num_envs=64, unroll_length=64, update_epochs=4,
-                           num_minibatches=4, learning_rate=1e-3, gamma=0.95,
-                           checkpoint_dir=args.ckpt_dir,
-                           engine_backend=args.engine_backend,
-                           updates_per_launch=args.updates_per_launch)
+        from repro.configs.ocean import ocean_tcfg, preset
+        names = list(OCEAN) if args.ocean == "all" \
+            else [n.strip() for n in args.ocean.split(",")]
+        if args.conformance:
+            from repro.envs.conformance import run_cli
+            raise SystemExit(run_cli(args.ocean, seed=args.seed))
         for name in names:
-            recurrent = (name == "memory")
-            tr = Trainer(OCEAN[name](), tcfg, hidden=64, recurrent=recurrent,
-                         seed=args.seed)
-            print(f"=== {name} (recurrent={recurrent}) ===")
-            m = tr.train(args.total_env_steps, log_every=10,
-                         target_score=0.9)
-            status = "SOLVED" if m["score"] >= 0.9 else "unsolved"
+            p = preset(name)
+            tcfg = ocean_tcfg(name, checkpoint_dir=args.ckpt_dir,
+                              engine_backend=args.engine_backend,
+                              updates_per_launch=args.updates_per_launch)
+            tr = Trainer(OCEAN[name](), tcfg, hidden=p.hidden,
+                         recurrent=p.recurrent, conv=p.conv, seed=args.seed)
+            steps = args.total_env_steps or p.total_steps
+            print(f"=== {name} (recurrent={p.recurrent}) ===")
+            m = tr.train(steps, log_every=10, target_score=p.target_score)
+            status = "SOLVED" if m["score"] >= p.target_score else "unsolved"
             print(f"  -> {status} score={m['score']:.3f} "
                   f"steps={m['env_steps']} sps={m['sps']:.0f}")
         return

@@ -49,20 +49,38 @@ def lstm_step(params, x, carry):
 class OceanPolicy:
     """MLP encoder (+ optional LSTM) + multidiscrete/value heads. The default
     architecture of the paper's model zoo: "an MLP sized to the flat
-    observation and action spaces"."""
+    observation and action spaces".
+
+    ``conv_shape=(H, W)`` enables the CNN frontend for pixel-grid envs: the
+    flat emulated observation is restored to its 2D layout (the paper's
+    "unemulate in the first line of the forward pass") and passed through a
+    small conv layer before the MLP. Requires ``obs_dim == H * W``."""
+
+    CONV_FILTERS = 8
 
     def __init__(self, obs_dim: int, nvec: tuple = (), hidden: int = 128,
-                 recurrent: bool = False, num_outputs: int = 0):
+                 recurrent: bool = False, num_outputs: int = 0,
+                 conv_shape: Optional[tuple] = None):
         self.obs_dim, self.nvec, self.hidden = obs_dim, tuple(nvec), hidden
         self.recurrent = recurrent
+        self.conv_shape = tuple(conv_shape) if conv_shape else None
+        if self.conv_shape:
+            H, W = self.conv_shape
+            assert H * W == obs_dim, (self.conv_shape, obs_dim)
         # num_outputs overrides for continuous heads (mean ++ log_std)
         self.num_actions = num_outputs or sum(self.nvec)
+
+    @property
+    def enc_in(self) -> int:
+        if self.conv_shape:
+            return self.obs_dim * self.CONV_FILTERS
+        return self.obs_dim
 
     def spec(self):
         h = self.hidden
         s = {
-            "enc1": ParamSpec((self.obs_dim, h), ("null", "null"),
-                              fan_in=self.obs_dim),
+            "enc1": ParamSpec((self.enc_in, h), ("null", "null"),
+                              fan_in=self.enc_in),
             "b1": ParamSpec((h,), ("null",), init="zeros"),
             "enc2": ParamSpec((h, h), ("null", "null"), fan_in=h),
             "b2": ParamSpec((h,), ("null",), init="zeros"),
@@ -74,6 +92,11 @@ class OceanPolicy:
         }
         if self.recurrent:
             s["lstm"] = lstm_spec(h, h)
+        if self.conv_shape:
+            s["conv"] = ParamSpec((3, 3, 1, self.CONV_FILTERS),
+                                  ("null", "null", "null", "null"), fan_in=9)
+            s["b_conv"] = ParamSpec((self.CONV_FILTERS,), ("null",),
+                                    init="zeros")
         return s
 
     def init(self, key, dtype=jnp.float32):
@@ -88,7 +111,22 @@ class OceanPolicy:
                 jnp.zeros((batch, self.hidden), jnp.float32))
 
     # paper §3.4 split ---------------------------------------------------------
+    def _conv_frontend(self, params, obs):
+        """(…, H*W) flat obs → (…, H*W*filters): restore the 2D pixel layout
+        and run one SAME-padded 3×3 conv. Handles any leading batch dims
+        ((B, obs) in step, (T, B, obs) in the non-recurrent seq path)."""
+        H, W = self.conv_shape
+        lead = obs.shape[:-1]
+        x = obs.reshape((-1, H, W, 1))
+        x = jax.lax.conv_general_dilated(
+            x, params["conv"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jnp.tanh(x + params["b_conv"])
+        return x.reshape(lead + (H * W * self.CONV_FILTERS,))
+
     def encode(self, params, obs):
+        if self.conv_shape:
+            obs = self._conv_frontend(params, obs)
         h = jnp.tanh(obs @ params["enc1"] + params["b1"])
         return jnp.tanh(h @ params["enc2"] + params["b2"])
 

@@ -30,7 +30,8 @@ class Trainer:
                  recurrent: bool = False, seed: int = 0,
                  kernel_mode: str = None, log_dir: str = None,
                  backend: str = None, updates_per_launch: int = None,
-                 mesh=None):
+                 mesh=None, conv: bool = None):
+        from repro.core import spaces as sp
         from repro.utils.metrics import MetricsLogger
         self.logger = MetricsLogger(log_dir,
                                     run_name=type(env).__name__.lower())
@@ -40,9 +41,22 @@ class Trainer:
             self.dist = Dist("categorical", nvec=self.em.act_spec.nvec)
         else:   # continuous actions — paper §8 extension
             self.dist = Dist("gaussian", cont_dim=self.em.act_spec.cont_dim)
+        # pixel envs opt in to the CNN frontend via `obs_frontend = "conv"`;
+        # the policy then restores the emulated-flat obs to its 2D layout
+        if conv is None:
+            conv = getattr(env, "obs_frontend", None) == "conv"
+        conv_shape = None
+        if conv:
+            space = env.observation_space
+            if not (isinstance(space, sp.Box) and len(space.shape) == 2):
+                raise ValueError(
+                    f"conv frontend needs a single 2D Box observation, got "
+                    f"{space}")
+            conv_shape = space.shape
         self.policy = OceanPolicy(self.em.obs_spec.total, self.dist.nvec,
                                   hidden=hidden, recurrent=recurrent,
-                                  num_outputs=self.dist.num_outputs)
+                                  num_outputs=self.dist.num_outputs,
+                                  conv_shape=conv_shape)
         self.engine = TrainEngine(self.em, self.policy, self.tcfg, self.dist,
                                   key=jax.random.PRNGKey(seed),
                                   backend=backend,

@@ -2,4 +2,9 @@ import pytest
 
 
 def pytest_configure(config):
+    # keep in sync with [tool.pytest.ini_options] markers in pyproject.toml
+    # (registered here too so bare `pytest tests/...` runs from any cwd
+    # never warn on unknown markers)
     config.addinivalue_line("markers", "slow: long-running training tests")
+    config.addinivalue_line(
+        "markers", "multi_device: needs/forces a multi-device host")

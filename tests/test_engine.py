@@ -237,6 +237,7 @@ print("SHARD_PARITY_OK")
 """
 
 
+@pytest.mark.multi_device
 def test_shard_map_tier_seed_matched_parity():
     """8-way shard_map data-parallel PPO is seed-matched with the
     single-device run (same rollout randomness via global-env-index keys,
@@ -259,3 +260,24 @@ def test_shard_map_tier_runs_on_available_devices():
     e = _build(Squared(), backend="shard_map", updates_per_launch=2)
     hist, _ = e.run(4 * e.steps_per_update)
     assert len(hist) == 4 and np.isfinite(hist[-1]["loss"])
+
+
+@pytest.mark.parametrize("backend", ["jit", "shard_map", "pool"])
+@pytest.mark.parametrize("name", ["pong", "drone", "tagteam", "maze"])
+def test_ocean_ii_envs_run_on_every_tier(name, backend):
+    """Each Ocean II env steps + learns under all three engine tiers — the
+    'plays nice' claim holds for pixel obs (CNN frontend), multi-dim
+    Gaussian actions, padded multi-agent rows, and procgen state alike."""
+    from repro.envs.ocean import OCEAN
+    from repro.rl.trainer import Trainer
+    tcfg = TrainConfig(num_envs=8, unroll_length=8, update_epochs=1,
+                       num_minibatches=2, learning_rate=1e-3, gamma=0.95,
+                       engine_backend=backend)
+    if backend == "shard_map" and 8 % jax.device_count():
+        pytest.skip("num_envs not divisible by device count")
+    tr = Trainer(OCEAN[name](), tcfg, hidden=16, kernel_mode="ref")
+    m = tr.train(2 * tr.steps_per_update)
+    assert len(tr.history) == 2
+    assert np.isfinite(m["loss"]) and np.isfinite(m["entropy"])
+    if name == "pong":
+        assert tr.policy.conv_shape == (6, 6)   # CNN frontend engaged

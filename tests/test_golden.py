@@ -1,0 +1,103 @@
+"""Golden-rollout regression suite: seeded metric digests per engine backend.
+
+Each (backend, env) cell runs 3 seeded PPO updates and compares every metric
+of every update against a committed fixture to 1e-6 — any cross-PR numeric
+drift in the rollout, GAE, learner, or engine dispatch order fails loudly
+here before it can silently change training behaviour.
+
+Regenerate (after an *intentional* numeric change, with the diff reviewed):
+
+    REPRO_UPDATE_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden.py
+
+The fixtures are generated on 1 device with kernel_mode="ref"; the shard_map
+cell pins a 1-device mesh so the digest is identical on multi-device hosts
+(cross-device reduction order is covered by the engine parity tests, not
+here).
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.core.emulation import Emulated
+from repro.envs.ocean import OCEAN
+from repro.models.policy import OceanPolicy
+from repro.rl.distributions import Dist
+from repro.rl.engine import TrainEngine, METRIC_KEYS
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "engine_rollouts.json")
+UPDATE = os.environ.get("REPRO_UPDATE_GOLDEN") == "1"
+
+BACKENDS = ("jit", "shard_map", "pool")
+ENVS = ("bandit", "squared")
+NUM_UPDATES = 3
+TOL = 1e-6
+# wall-clock metrics can never be golden
+DIGEST_KEYS = tuple(k for k in METRIC_KEYS) + ("env_steps",)
+
+TCFG = TrainConfig(num_envs=8, unroll_length=8, update_epochs=2,
+                   num_minibatches=2, learning_rate=1e-3, gamma=0.95)
+
+
+def _run_cell(backend: str, env_name: str):
+    env = Emulated(OCEAN[env_name]())
+    dist = Dist("categorical", nvec=env.act_spec.nvec)
+    pol = OceanPolicy(env.obs_spec.total, dist.nvec, hidden=32,
+                      num_outputs=dist.num_outputs)
+    mesh = None
+    if backend == "shard_map":
+        # pin one device: golden digests must not depend on host device count
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("data",))
+    engine = TrainEngine(env, pol, TCFG, dist, key=jax.random.PRNGKey(0),
+                         backend=backend, kernel_mode="ref", mesh=mesh)
+    hist, _ = engine.run(NUM_UPDATES * engine.steps_per_update)
+    assert len(hist) == NUM_UPDATES
+    return [[float(h[k]) for k in DIGEST_KEYS] for h in hist]
+
+
+def _load_golden() -> dict:
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("env_name", ENVS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_golden_rollout(backend, env_name):
+    cell = f"{backend}/{env_name}"
+    got = _run_cell(backend, env_name)
+    if UPDATE:
+        data = _load_golden() if os.path.exists(GOLDEN_PATH) else {
+            "metric_keys": list(DIGEST_KEYS), "cells": {}}
+        data["cells"][cell] = got
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        pytest.skip(f"golden fixture updated for {cell}")
+    data = _load_golden()
+    assert data["metric_keys"] == list(DIGEST_KEYS), \
+        "metric schema changed — regenerate the golden fixtures"
+    want = data["cells"][cell]
+    for u, (w_row, g_row) in enumerate(zip(want, got)):
+        for k, w, g in zip(DIGEST_KEYS, w_row, g_row):
+            assert abs(w - g) <= TOL, (
+                f"{cell} update {u} metric {k!r} drifted: "
+                f"golden {w!r} vs current {g!r} (|Δ|={abs(w - g):.3e} > "
+                f"{TOL}). If this change is intentional, regenerate with "
+                f"REPRO_UPDATE_GOLDEN=1 and review the fixture diff.")
+
+
+def test_golden_fixture_committed():
+    """The fixture must exist and cover the full backend × env grid — a
+    missing cell means a backend silently dropped out of regression cover."""
+    data = _load_golden()
+    want = {f"{b}/{e}" for b in BACKENDS for e in ENVS}
+    assert set(data["cells"]) == want
+    for cell, rows in data["cells"].items():
+        assert len(rows) == NUM_UPDATES
+        assert all(len(r) == len(DIGEST_KEYS) for r in rows)
+        assert all(np.isfinite(v) for r in rows for v in r), cell

@@ -135,6 +135,37 @@ def test_recurrent_toggle_same_model():
         assert (carry is None) == (not rec)
 
 
+def test_conv_frontend_shapes_and_batching():
+    """CNN frontend: flat emulated obs restored to 2D, conv'd, and the
+    result identical whether stepped as (B, obs) or scanned as (T, B, obs)
+    — the seq path the learner recomputes through."""
+    from repro.models.policy import OceanPolicy
+    pol = OceanPolicy(36, (3,), hidden=16, conv_shape=(6, 6))
+    params = pol.init(KEY)
+    assert params["conv"].shape == (3, 3, 1, pol.CONV_FILTERS)
+    obs = jax.random.uniform(KEY, (4, 36))
+    logits, value, _ = pol.step(params, obs, None)
+    assert logits.shape == (4, 3) and value.shape == (4,)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    seq = jnp.stack([obs, obs])                       # (T=2, B=4, 36)
+    l2, v2, _ = pol.seq(params, seq, None, jnp.zeros((2, 4), bool))
+    np.testing.assert_allclose(np.asarray(l2[0]), np.asarray(logits),
+                               rtol=1e-6, atol=1e-6)
+    # translation sensitivity: moving the pixel changes the logits (the
+    # conv actually reads layout, not just a flat sum)
+    img = jnp.zeros((6, 6)).at[1, 1].set(1.0)
+    img2 = jnp.zeros((6, 6)).at[4, 2].set(1.0)
+    la, *_ = pol.step(params, img.reshape(1, 36), None)
+    lb, *_ = pol.step(params, img2.reshape(1, 36), None)
+    assert float(jnp.abs(la - lb).max()) > 1e-6
+
+
+def test_conv_frontend_requires_matching_shape():
+    from repro.models.policy import OceanPolicy
+    with pytest.raises(AssertionError):
+        OceanPolicy(35, (3,), conv_shape=(6, 6))
+
+
 def test_int8_quantized_policy_matches():
     """int8 serving path: same predictions, half the weight bytes."""
     from repro.models.params import quantize_params, param_count

@@ -95,6 +95,7 @@ print("SERVE_OK")
 """
 
 
+@pytest.mark.multi_device
 def test_micro_mesh_compiles():
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run([sys.executable, "-c", MICRO], capture_output=True,
