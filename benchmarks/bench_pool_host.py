@@ -49,7 +49,7 @@ def run_once(M: int, N: int, steps: int = 300, seed: int = 0):
                      for i in range(M)], batch_size=N, seed=seed)
     t0 = time.perf_counter()
     for _ in range(steps):
-        obs, rew, done, ids = pool.recv()
+        obs, rew, done, info, ids = pool.recv()
         act = _policy(obs)
         pool.send(act, ids)
     sps = steps * N / (time.perf_counter() - t0)

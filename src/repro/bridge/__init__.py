@@ -1,0 +1,23 @@
+"""HostBridge: one-line wrappers for third-party host environments.
+
+    from repro import bridge
+    venv = bridge.wrap(lambda: MyGymnasiumEnv(), num_envs=8)
+
+Auto-detects Gymnasium / PettingZoo-parallel / duck-typed ``reset``+``step``
+APIs, derives emulation specs from ``core/emulation``, and exposes the
+VecEnv batch protocol over the first-finisher ``core/host.HostPool``.
+``make_host_engine`` lifts a wrapped env into the TrainEngine's async
+``host`` tier. See ``bridge/vecenv.py`` and ``bridge/adapters.py``.
+"""
+from repro.bridge.adapters import (ADAPTERS, APIS, DuckAdapter,
+                                   GymnasiumAdapter, PettingZooAdapter,
+                                   convert_space, detect_api, np_emulate_obs,
+                                   np_unemulate_action, spaces_of)
+from repro.bridge.vecenv import HostVecEnv, make_host_engine, wrap
+
+__all__ = [
+    "ADAPTERS", "APIS", "DuckAdapter", "GymnasiumAdapter",
+    "PettingZooAdapter", "HostVecEnv", "convert_space", "detect_api",
+    "make_host_engine", "np_emulate_obs", "np_unemulate_action", "spaces_of",
+    "wrap",
+]

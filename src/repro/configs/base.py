@@ -177,7 +177,10 @@ class TrainConfig:
 
     # training engine (rl/engine.py)
     updates_per_launch: int = 1      # K: fused updates per host dispatch
-    engine_backend: str = "jit"      # jit | shard_map | pool
+    engine_backend: str = "jit"      # jit | shard_map | pool | host
+    host_recv_timeout: float = 60.0  # host tier: bound on one first-finisher
+                                     # batch (turns a hung worker into an
+                                     # error instead of a deadlocked run)
 
     # fault tolerance
     checkpoint_every: int = 100

@@ -10,12 +10,29 @@ overlaps policy compute. M = 2N ⇒ double buffering (paper §3.3).
 (Threads, not processes: env steps that block in C/sleep release the GIL,
 which is also how NLE/Atari steps behave. The paper's shared-memory and
 busy-wait micro-optimizations are process-world trivia — see DESIGN.md §2.)
+
+Protocol guarantees (what the bridge/engine layers above rely on):
+
+  * autoreset — a worker resets its env in-thread on ``done``; the batch row
+    carries the *terminal* step's reward/done/info and the *next* episode's
+    first observation, exactly like the JAX ``VecEnv`` autoreset path.
+  * seeding — episode ``e`` of env ``i`` resets with ``seed + i + M * e``, a
+    deterministic per-env seed sequence (the old ``env.reset(None)`` made
+    every post-crash episode nondeterministic).
+  * terminal info — ``recv`` surfaces fixed-shape episode stats
+    (``score`` / ``episode_return`` / ``episode_length`` / ``valid`` with
+    ``valid == done``) accumulated per env, matching ``envs/base.empty_info``.
+  * crash propagation — an exception in ``reset``/``step`` is forwarded as a
+    ``HostEnvError`` raised from ``recv()`` (naming the env), never a
+    silently dead thread with ``recv()`` blocked forever; ``recv(timeout=)``
+    additionally bounds the wait on healthy-but-slow workers.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, List, Optional, Sequence
+import time
+from typing import Callable, List, Sequence
 
 import numpy as np
 
@@ -30,66 +47,174 @@ class HostEnv:
         raise NotImplementedError
 
 
+class HostEnvError(RuntimeError):
+    """A worker env raised; re-raised on the consumer thread by ``recv``."""
+
+    def __init__(self, env_index: int, op: str, cause: BaseException):
+        super().__init__(
+            f"host env {env_index} raised in {op}: "
+            f"{type(cause).__name__}: {cause}")
+        self.env_index = env_index
+        self.op = op
+
+
+class _WorkerFailure:
+    """Ready-queue sentinel carrying a worker exception to recv()."""
+
+    def __init__(self, env_index: int, op: str, exc: BaseException):
+        self.env_index, self.op, self.exc = env_index, op, exc
+
+
 class HostPool:
     """EnvPool semantics over host envs.
 
-    recv() -> (obs (N, …), rew (N,), done (N,), env_ids (N,))
+    recv()  -> (obs (N, …), rew (N, …), done (N,), info, env_ids (N,))
     send(actions, env_ids)
 
-    With num_envs == batch_size this degrades to synchronous vectorization
-    (wait for everyone) — the paper's baseline.
+    ``info`` is a dict of per-env arrays — ``score`` (f32), ``episode_return``
+    (f32), ``episode_length`` (i32), ``valid`` (bool) — nonzero exactly on the
+    rows whose episode ended this step (``valid == done``). ``score`` is taken
+    from the env's terminal step info dict (key ``"score"``) when present.
+
+    Batch rows are sorted by env index, so with num_envs == batch_size the
+    pool degrades to *deterministic* synchronous vectorization (wait for
+    everyone, rows always 0..M-1) — the paper's baseline.
     """
 
     def __init__(self, env_fns: Sequence[Callable[[], HostEnv]],
                  batch_size: int, seed: int = 0):
         self.M = len(env_fns)
         self.N = batch_size
-        assert self.N <= self.M
+        assert 1 <= self.N <= self.M
+        self.seed = seed
         self._envs: List[HostEnv] = [fn() for fn in env_fns]
         self._ready: "queue.Queue" = queue.Queue()
         self._threads: List[threading.Thread] = []
         self._inboxes: List["queue.Queue"] = [queue.Queue(1)
                                               for _ in range(self.M)]
         self._stop = False
+        self._closed = False
+        # episode-stat accumulators (touched only by the recv thread; every
+        # ready item passes through recv exactly once, in per-env order)
+        self._ep_return = np.zeros((self.M,), np.float64)
+        self._ep_length = np.zeros((self.M,), np.int64)
         for i, env in enumerate(self._envs):
             t = threading.Thread(target=self._worker, args=(i,), daemon=True)
             t.start()
             self._threads.append(t)
-        for i in range(self.M):                 # initial resets
+        for i in range(self.M):                 # initial resets (episode 0)
             self._inboxes[i].put(("reset", seed + i))
 
     def _worker(self, i: int):
         env = self._envs[i]
-        while not self._stop:
-            cmd, arg = self._inboxes[i].get()
-            if cmd == "close":
-                return
-            if cmd == "reset":
-                obs = env.reset(arg)
-                self._ready.put((i, obs, 0.0, False))
-            else:
-                obs, rew, done, info = env.step(arg)
-                if done:
-                    obs = env.reset(None)
-                self._ready.put((i, obs, rew, done))
+        episode = 0
+        op = "reset"
+        try:
+            while not self._stop:
+                cmd, arg = self._inboxes[i].get()
+                if cmd == "close" or self._stop:
+                    return
+                if cmd == "reset":
+                    op = "reset"
+                    obs = env.reset(arg)
+                    self._ready.put((i, obs, 0.0, False, None, False))
+                else:
+                    op = "step"
+                    obs, rew, done, info = env.step(arg)
+                    if done:
+                        # deterministic per-env seed sequence: episode e of
+                        # env i resets with seed + i + M*e
+                        episode += 1
+                        op = "reset"
+                        obs = env.reset(self.seed + i + self.M * episode)
+                    self._ready.put((i, obs, rew, done, info, True))
+        except Exception as e:   # noqa: BLE001 — forwarded, never swallowed
+            self._ready.put(_WorkerFailure(i, op, e))
 
-    def recv(self):
-        """Block until the N first-finished envs have observations."""
-        items = [self._ready.get() for _ in range(self.N)]
+    def recv(self, timeout: float = None):
+        """Block until the N first-finished envs have observations.
+
+        Raises ``HostEnvError`` if any of those envs crashed, and
+        ``TimeoutError`` if fewer than N envs produce a result within
+        ``timeout`` seconds (None ⇒ wait forever)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        items = []
+        for _ in range(self.N):
+            try:
+                if deadline is None:
+                    it = self._ready.get()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise queue.Empty
+                    it = self._ready.get(timeout=remaining)
+            except queue.Empty:
+                raise TimeoutError(
+                    f"HostPool.recv timed out after {timeout}s with "
+                    f"{len(items)}/{self.N} envs ready (slow or deadlocked "
+                    f"worker?)") from None
+            if isinstance(it, _WorkerFailure):
+                raise HostEnvError(it.env_index, it.op, it.exc) from it.exc
+            items.append(it)
+        items.sort(key=lambda it: it[0])        # deterministic row layout
         ids = np.asarray([it[0] for it in items])
         obs = np.stack([np.asarray(it[1]) for it in items])
-        rew = np.asarray([it[2] for it in items], np.float32)
+        # initial-reset rows carry scalar 0.0 rewards; broadcast them to the
+        # step-reward shape (per-agent vectors for multi-agent envs)
+        rews = [np.asarray(it[2], np.float32) for it in items]
+        shp = max((r.shape for r in rews), default=())
+        rew = np.stack([np.broadcast_to(r, shp) for r in rews])
         done = np.asarray([it[3] for it in items], bool)
-        return obs, rew, done, ids
+        info = self._episode_stats(items)
+        return obs, rew, done, info, ids
+
+    def _episode_stats(self, items) -> dict:
+        """Fold this batch into the per-env accumulators and emit the
+        fixed-shape terminal-info rows (valid == done)."""
+        n = len(items)
+        score = np.zeros((n,), np.float32)
+        ep_ret = np.zeros((n,), np.float32)
+        ep_len = np.zeros((n,), np.int32)
+        valid = np.zeros((n,), bool)
+        for j, (i, _obs, rew, done, raw, is_step) in enumerate(items):
+            if not is_step:
+                continue                        # initial reset: not a step
+            self._ep_return[i] += float(np.sum(rew))
+            self._ep_length[i] += 1
+            if done:
+                valid[j] = True
+                ep_ret[j] = self._ep_return[i]
+                ep_len[j] = self._ep_length[i]
+                if raw:
+                    score[j] = float(raw.get("score", 0.0))
+                self._ep_return[i] = 0.0
+                self._ep_length[i] = 0
+        return {"score": score, "episode_return": ep_ret,
+                "episode_length": ep_len, "valid": valid}
 
     def send(self, actions, env_ids):
         for a, i in zip(np.asarray(actions), env_ids):
             self._inboxes[int(i)].put(("step", a))
 
-    def close(self):
+    def close(self, timeout: float = 5.0):
+        """Stop workers and join them. Drains each inbox before posting the
+        close sentinel so a worker blocked in ``queue.get`` always receives
+        it (the old ``put_nowait`` on a full Queue(1) was silently skipped,
+        leaving the worker blocked forever)."""
+        if self._closed:
+            return
+        self._closed = True
         self._stop = True
         for i in range(self.M):
-            try:
-                self._inboxes[i].put_nowait(("close", None))
-            except queue.Full:
-                pass
+            for _ in range(2):                  # drain, then post (bounded)
+                try:
+                    self._inboxes[i].put_nowait(("close", None))
+                    break
+                except queue.Full:
+                    try:
+                        self._inboxes[i].get_nowait()
+                    except queue.Empty:
+                        pass
+        deadline = time.monotonic() + timeout
+        for t in self._threads:
+            t.join(timeout=max(0.0, deadline - time.monotonic()))

@@ -463,10 +463,212 @@ def check_env(env_or_name, *, seed: int = 0,
     return report
 
 
-def run_cli(env_arg: str, seed: int = 0) -> int:
+# ---------------------------------------------------------------------------
+# host profile — the "plays nice" contract for bridged host envs
+#
+# A bridged env can't satisfy the jit/vmap/purity checks (its state lives in
+# Python), but the protocol the training stack consumes — stable flat f32
+# observation batches, autoreset with valid == done episode stats, seeded
+# determinism — is just as checkable. ``check_host_env`` runs these against a
+# *factory* of synchronous (num_envs == batch_size) ``bridge.HostVecEnv``
+# instances: sync mode makes row layout deterministic, which the determinism
+# check needs; the async first-finisher path shares all the same code below
+# the batching order.
+
+def _random_host_actions(venv, rng):
+    space = venv.action_space
+    if isinstance(space, sp.MultiDiscrete):
+        return np.stack([rng.integers(0, n, venv.batch_size)
+                         for n in space.nvec], axis=-1).astype(np.int32)
+    return rng.uniform(-1.0, 1.0,
+                       (venv.batch_size,) + space.shape).astype(np.float32)
+
+
+def _host_horizon(venv) -> int:
+    return int(venv.horizon or 64)
+
+
+_INFO_DTYPES = {"score": np.float32, "episode_return": np.float32,
+                "episode_length": np.int32, "valid": np.bool_}
+
+
+def check_host_protocol(factory, seed) -> list:
+    out = []
+    v = factory()
+    try:
+        if v.num_envs != v.batch_envs:
+            out.append(f"host profile needs a sync wrapper (num_envs="
+                       f"{v.num_envs} != batch_size={v.batch_envs}); build "
+                       f"the factory with bridge.wrap(fn, num_envs=N)")
+        obs = v.reset(timeout=30.0)
+        if obs.shape != (v.batch_size, v.obs_dim):
+            out.append(f"reset obs shape {obs.shape} != "
+                       f"{(v.batch_size, v.obs_dim)}")
+        if obs.dtype != np.float32:
+            out.append(f"reset obs dtype {obs.dtype} != float32 (the bridge "
+                       f"packs model-facing f32)")
+        if not isinstance(v.action_space, (sp.MultiDiscrete, sp.Box)):
+            out.append(f"emulated action space {v.action_space} is neither "
+                       f"MultiDiscrete nor Box")
+    finally:
+        v.close()
+    return out
+
+
+def check_host_stability(factory, seed) -> list:
+    out = []
+    v = factory()
+    rng = np.random.default_rng(seed)
+    try:
+        obs = v.reset(timeout=30.0)
+        sig0 = None
+        for t in range(min(2 * _host_horizon(v) + 2, 64)):
+            obs, rew, done, info = v.step(_random_host_actions(v, rng),
+                                          timeout=30.0)
+            sig = (obs.shape, str(obs.dtype), rew.shape, str(rew.dtype),
+                   done.shape, str(done.dtype),
+                   tuple(sorted((k, x.shape, str(x.dtype))
+                                for k, x in info.items())))
+            if sig0 is None:
+                sig0 = sig
+            elif sig != sig0:
+                out.append(f"shape/dtype signature changed at step {t}")
+                break
+            if not np.all(np.isfinite(obs)):
+                out.append(f"non-finite observation at step {t}")
+                break
+            for k, dt in _INFO_DTYPES.items():
+                if k not in info:
+                    out.append(f"info missing required field {k!r}")
+                    return out
+                if info[k].dtype != dt:
+                    out.append(f"info[{k!r}] dtype {info[k].dtype} != "
+                               f"{np.dtype(dt)}")
+                    return out
+            env_done = done.reshape(v.batch_envs, v.num_agents)[:, 0]
+            if not np.array_equal(env_done, info["valid"]):
+                out.append(f"info['valid'] disagrees with done at step {t}: "
+                           f"episode stats must fire exactly at episode end")
+                break
+    finally:
+        v.close()
+    return out
+
+
+def check_host_autoreset(factory, seed) -> list:
+    out = []
+    v = factory()
+    rng = np.random.default_rng(seed)
+    try:
+        H = _host_horizon(v)
+        v.reset(timeout=30.0)
+        dones_seen = 0
+        for t in range(2 * H + 2):
+            _obs, _rew, done, info = v.step(_random_host_actions(v, rng),
+                                            timeout=30.0)
+            dones_seen += int(np.asarray(done).sum())
+            lens = np.asarray(info["episode_length"])[info["valid"]]
+            if len(lens) and ((lens <= 0).any() or (lens > H).any()):
+                out.append(f"episode_length outside (0, horizon={H}] at "
+                           f"step {t}: {lens}")
+                break
+            scores = np.asarray(info["score"])[info["valid"]]
+            if len(scores) and not np.all((scores >= 0.0) & (scores <= 1.0)):
+                out.append(f"terminal score outside [0, 1] at step {t}: "
+                           f"{scores}")
+                break
+        if dones_seen == 0:
+            out.append(f"no episode terminated in {2 * H + 2} steps "
+                       f"(declared horizon {H}); autoreset unverifiable")
+    finally:
+        v.close()
+    return out
+
+
+def check_host_determinism(factory, seed) -> list:
+    """Two same-seed instances fed the same actions must produce identical
+    streams across at least one autoreset boundary — this is what the
+    per-env seed sequence in ``HostPool`` guarantees (the old
+    ``env.reset(None)`` autoreset made every episode after the first
+    nondeterministic)."""
+    va, vb = factory(), factory()
+    try:
+        steps = min(2 * _host_horizon(va) + 2, 80)
+        rng = np.random.default_rng(seed)
+        acts = [_random_host_actions(va, rng) for _ in range(steps)]
+        oa = [va.reset(timeout=30.0)]
+        ob = [vb.reset(timeout=30.0)]
+        ra, rb = [], []
+        for t in range(steps):
+            o, r, _d, _i = va.step(acts[t], timeout=30.0)
+            oa.append(o)
+            ra.append(r)
+            o, r, _d, _i = vb.step(acts[t], timeout=30.0)
+            ob.append(o)
+            rb.append(r)
+        for t, (a, b) in enumerate(zip(oa, ob)):
+            if not np.array_equal(a, b):
+                return [f"same-seed instances diverged in obs at step {t} "
+                        f"(autoreset seeding or hidden host randomness?)"]
+        for t, (a, b) in enumerate(zip(ra, rb)):
+            if not np.array_equal(a, b):
+                return [f"same-seed instances diverged in reward at step "
+                        f"{t}"]
+    finally:
+        va.close()
+        vb.close()
+    return []
+
+
+HOST_CHECKS = {
+    "host_protocol": check_host_protocol,
+    "host_stability": check_host_stability,
+    "host_autoreset": check_host_autoreset,
+    "host_determinism": check_host_determinism,
+}
+
+
+def check_host_env(factory, *, name: str = None,
+                   seed: int = 0, checks: Optional[list] = None
+                   ) -> ConformanceReport:
+    """Run the host-profile conformance suite.
+
+    ``factory`` builds a fresh **synchronous** ``bridge.HostVecEnv`` per
+    call, e.g. ``lambda: bridge.wrap(MyEnv, num_envs=2)``. Same report
+    semantics as ``check_env``: a check that raises is a violation, never a
+    crash."""
+    report = ConformanceReport(env_name=name or "host_env")
+    for cname in (checks or HOST_CHECKS):
+        fn = HOST_CHECKS[cname]
+        try:
+            violations = fn(factory, seed)
+        except Exception as e:   # noqa: BLE001 — report, don't crash
+            violations = [f"check raised {type(e).__name__}: {e}"]
+        report.results.append(
+            CheckResult(cname, not violations, tuple(violations)))
+    return report
+
+
+def run_cli(env_arg: str, seed: int = 0, host: bool = False) -> int:
     """Check 'all' or a comma-separated name list against the registry,
     print each report, return a process exit code (1 on any violation).
-    Shared by this module's __main__ and ``launch.train --conformance``."""
+    Shared by this module's __main__ and ``launch.train --conformance``.
+    With ``host=True`` the names come from the ``OCEAN_HOST`` mirror
+    registry and run the host profile through ``bridge.wrap``."""
+    if host:
+        from repro.bridge import wrap
+        from repro.envs.ocean_host import OCEAN_HOST
+        names = list(OCEAN_HOST) if env_arg == "all" \
+            else [n.strip() for n in env_arg.split(",")]
+        bad = 0
+        for name in names:
+            cls = OCEAN_HOST[name]
+            report = check_host_env(
+                lambda cls=cls: wrap(cls, num_envs=2, seed=seed),
+                name=f"host/{name}", seed=seed)
+            print(report.summary())
+            bad += not report.ok
+        return 1 if bad else 0
     from repro.envs.ocean import OCEAN
     names = list(OCEAN) if env_arg == "all" \
         else [n.strip() for n in env_arg.split(",")]
@@ -484,9 +686,12 @@ def main(argv=None):
         description="Run the env-conformance suite (see envs/conformance.py)")
     ap.add_argument("env", help="OCEAN registry name(s, comma-separated), "
                                 "or 'all'")
+    ap.add_argument("--host", action="store_true",
+                    help="run the host profile over the OCEAN_HOST mirror "
+                         "registry (bridge-wrapped) instead of the JAX suite")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    return run_cli(args.env, seed=args.seed)
+    return run_cli(args.env, seed=args.seed, host=args.host)
 
 
 if __name__ == "__main__":

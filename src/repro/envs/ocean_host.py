@@ -1,0 +1,260 @@
+"""Ocean host mirrors — pure-Python/numpy twins of JAX Ocean envs.
+
+These exist so the HostBridge has *exact parity targets*: each mirror
+reimplements an Ocean env's dynamics with plain numpy state (the shape of a
+real third-party env — NetHack, Atari — that can't live inside jit), and
+deliberately speaks a different host API so ``bridge.wrap``'s auto-detection
+is exercised end to end:
+
+  HostBandit   — duck-typed  (``reset(seed) -> obs``, 4-tuple ``step``);
+                 mirror of ``ocean.Bandit``.
+  HostSquared  — duck-typed; mirror of ``ocean.Squared``.
+  HostDrone    — Gymnasium API (``reset(seed=...) -> (obs, info)``, 5-tuple
+                 ``step``, real ``gymnasium.spaces`` when installed, duck
+                 stand-ins otherwise); mirror of ``ocean.Drone``.
+  HostTeam     — PettingZoo-parallel API (``possible_agents`` + per-agent
+                 dicts); mirror of ``ocean.Multiagent``.
+
+Terminal step ``info`` carries ``"score"`` normalized to [0, 1] exactly like
+the JAX originals, so ``target_score``-driven training and the parity tests
+(`host` tier on the mirror vs `jit` tier on the original, same training
+params) compare like for like. Optional ``jitter_ms`` injects lognormal step
+latency — the NetHack/Crafter-shaped variance the paper's EnvPool exploits —
+for the sync-vs-async benchmark (``benchmarks/bench_bridge.py``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import spaces as sp
+
+try:                                            # real Gymnasium when present
+    from gymnasium import spaces as _gym_spaces
+except ImportError:                             # duck stand-ins otherwise
+    _gym_spaces = None
+
+
+class _Jitter:
+    """Optional lognormal step latency (mean ``jitter_ms``, σ=0.6)."""
+
+    def __init__(self, jitter_ms: float, seed: int):
+        self.jitter_ms = jitter_ms
+        self.rng = np.random.RandomState(seed)
+
+    def sleep(self):
+        if self.jitter_ms > 0:
+            time.sleep(self.rng.lognormal(
+                np.log(self.jitter_ms), 0.6) / 1e3)
+
+
+# ---------------------------------------------------------------------------
+
+
+class HostBandit:
+    """Duck-typed mirror of ``ocean.Bandit``: stochastic arm payouts, score
+    = return / best-arm payout."""
+
+    PROBS = (0.2, 0.5, 0.1, 0.9)
+
+    def __init__(self, horizon: int = 16, jitter_ms: float = 0.0,
+                 jitter_seed: int = 0):
+        self.horizon = horizon
+        self.observation_space = sp.Box((1,))
+        self.action_space = sp.Discrete(len(self.PROBS))
+        self._jit = _Jitter(jitter_ms, jitter_seed)
+        self.rng: Optional[np.random.RandomState] = None
+        self.t, self.ret = 0, 0.0
+
+    def reset(self, seed):
+        self.rng = np.random.RandomState(
+            None if seed is None else int(seed) % (2 ** 32))
+        self.t, self.ret = 0, 0.0
+        return np.zeros((1,), np.float32)
+
+    def step(self, action):
+        self._jit.sleep()
+        rew = float(self.rng.random_sample() < self.PROBS[int(action)])
+        self.t += 1
+        self.ret += rew
+        done = self.t >= self.horizon
+        info = {}
+        if done:
+            info["score"] = min(
+                1.0, self.ret / (self.horizon * max(self.PROBS)))
+        return np.zeros((1,), np.float32), rew, done, info
+
+
+class HostSquared:
+    """Duck-typed mirror of ``ocean.Squared``: perimeter targets on a g×g
+    grid, reward = 1 − normalized L∞ distance to the closest unhit target."""
+
+    def __init__(self, size: int = 5, horizon: int = 32):
+        assert size % 2 == 1
+        self.size, self.horizon = size, horizon
+        self.observation_space = sp.Box((size, size))
+        self.action_space = sp.Discrete(5)      # stay, N, S, W, E
+        g = size
+        per = np.zeros((g, g), bool)
+        per[0, :] = per[-1, :] = per[:, 0] = per[:, -1] = True
+        self._perimeter = per
+        ii, jj = np.meshgrid(np.arange(g), np.arange(g), indexing="ij")
+        self._coords = np.stack([ii, jj], -1)
+        r = g // 2
+        self._optimal = float(sum(1.0 - d / r for d in range(1, r))
+                              + 4 * (g - 1))
+        self.pos = None
+        self.hit = None
+        self.t, self.ret = 0, 0.0
+
+    def reset(self, seed):
+        g = self.size
+        self.pos = np.array([g // 2, g // 2])
+        self.hit = np.zeros((g, g), bool)
+        self.t, self.ret = 0, 0.0
+        return self._obs()
+
+    def _obs(self):
+        grid = np.where(self._perimeter & ~self.hit, 0.5, 0.0)
+        grid[self.pos[0], self.pos[1]] = 1.0
+        return grid.astype(np.float32)
+
+    def step(self, action):
+        g = self.size
+        moves = np.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]])
+        self.pos = np.clip(self.pos + moves[int(action)], 0, g - 1)
+        active = self._perimeter & ~self.hit
+        dist = np.max(np.abs(self._coords - self.pos), -1)
+        d = np.min(np.where(active, dist, g * 2))
+        reward = float(1.0 - d / (g // 2)) if active.any() else 0.0
+        if active[self.pos[0], self.pos[1]]:
+            self.hit[self.pos[0], self.pos[1]] = True
+        self.t += 1
+        self.ret += reward
+        done = (self.t >= self.horizon
+                or bool(np.all(self.hit | ~self._perimeter)))
+        info = {}
+        if done:
+            info["score"] = float(np.clip(self.ret / self._optimal, 0.0, 1.0))
+        return self._obs(), reward, done, info
+
+
+# ---------------------------------------------------------------------------
+
+
+class _DuckBox:
+    """Minimal gymnasium.spaces.Box stand-in (shape/dtype/low/high)."""
+
+    def __init__(self, low, high, shape, dtype=np.float32):
+        self.low, self.high = np.full(shape, low), np.full(shape, high)
+        self.shape, self.dtype = tuple(shape), np.dtype(dtype)
+
+
+def _gym_box(low, high, shape):
+    if _gym_spaces is not None:
+        return _gym_spaces.Box(low, high, shape, np.float32)
+    return _DuckBox(low, high, shape)
+
+
+class HostDrone:
+    """Gymnasium-API mirror of ``ocean.Drone``: reach and hover at a random
+    3-D target with a Box((3,)) thrust action. ``reset(seed=...) ->
+    (obs, info)``; ``step -> (obs, rew, terminated, truncated, info)``
+    (episodes end by truncation at the horizon, Gymnasium-style)."""
+
+    metadata = {"render_modes": []}
+
+    def __init__(self, horizon: int = 16, thrust: float = 0.5,
+                 jitter_ms: float = 0.0, jitter_seed: int = 0):
+        self.horizon, self.thrust = horizon, thrust
+        self.observation_space = _gym_box(-1.0, 1.0, (6,))
+        self.action_space = _gym_box(-1.0, 1.0, (3,))
+        self._jit = _Jitter(jitter_ms, jitter_seed)
+        self.pos = self.target = None
+        self.t, self.ret = 0, 0.0
+
+    def _obs(self):
+        return np.concatenate([self.pos, self.target]).astype(np.float32)
+
+    def reset(self, *, seed=None, options=None):
+        rng = np.random.RandomState(
+            None if seed is None else int(seed) % (2 ** 32))
+        self.pos = np.zeros((3,))
+        self.target = rng.uniform(-0.8, 0.8, (3,))
+        self.t, self.ret = 0, 0.0
+        return self._obs(), {}
+
+    def step(self, action):
+        self._jit.sleep()
+        a = np.clip(np.asarray(action, np.float64).reshape(3), -1.0, 1.0)
+        self.pos = np.clip(self.pos + self.thrust * a, -1.0, 1.0)
+        reward = max(0.0, 1.0 - 0.5 * float(
+            np.linalg.norm(self.pos - self.target)))
+        self.t += 1
+        self.ret += reward
+        truncated = self.t >= self.horizon
+        info = {}
+        if truncated:
+            info["score"] = float(np.clip(self.ret / self.horizon, 0.0, 1.0))
+        return self._obs(), reward, False, truncated, info
+
+
+class HostTeam:
+    """PettingZoo-parallel mirror of ``ocean.Multiagent``: agent j must play
+    action j; per-agent reward 1 on a match. Score (reported identically in
+    every agent's terminal info) = mean correctness, like the original."""
+
+    possible_agents = ("agent_0", "agent_1")
+
+    def __init__(self, horizon: int = 8):
+        self.horizon = horizon
+        self.agents = list(self.possible_agents)
+        self.t = 0
+        self.ret = np.zeros((2,))
+
+    def observation_space(self, agent):
+        return sp.Box((2,))
+
+    def action_space(self, agent):
+        return sp.Discrete(2)
+
+    def _obs(self):
+        eye = np.eye(2, dtype=np.float32)
+        return {ag: eye[j] for j, ag in enumerate(self.possible_agents)}
+
+    def reset(self, *, seed=None, options=None):
+        self.agents = list(self.possible_agents)
+        self.t = 0
+        self.ret = np.zeros((2,))
+        return self._obs(), {ag: {} for ag in self.possible_agents}
+
+    def step(self, actions):
+        correct = np.array([float(int(actions[ag]) == j)
+                            for j, ag in enumerate(self.possible_agents)])
+        self.ret += correct
+        self.t += 1
+        done = self.t >= self.horizon
+        score = float(np.mean(self.ret) / self.horizon)
+        infos = {ag: ({"score": score} if done else {})
+                 for ag in self.possible_agents}
+        if done:
+            self.agents = []
+        rew = {ag: float(correct[j])
+               for j, ag in enumerate(self.possible_agents)}
+        term = {ag: done for ag in self.possible_agents}
+        trunc = {ag: False for ag in self.possible_agents}
+        return self._obs(), rew, term, trunc, infos
+
+
+OCEAN_HOST = {
+    "bandit": HostBandit,
+    "squared": HostSquared,
+    "drone": HostDrone,
+    "team": HostTeam,
+}
+
+
+def make(name: str, **kw):
+    return OCEAN_HOST[name](**kw)

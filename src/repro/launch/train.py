@@ -19,9 +19,14 @@ def main():
     ap.add_argument("--conformance", action="store_true",
                     help="run the env-conformance harness on the --ocean "
                          "env(s) instead of training; exit 1 on violations")
-    ap.add_argument("--engine-backend", default="jit",
-                    choices=("jit", "shard_map", "pool"),
-                    help="TrainEngine tier for --ocean runs")
+    ap.add_argument("--engine-backend", default=None,
+                    choices=("jit", "shard_map", "pool", "host"),
+                    help="TrainEngine tier (default: jit for --ocean; "
+                         "--host-env always runs the host tier)")
+    ap.add_argument("--host-env", default=None,
+                    help="host-mirror env name(s, comma-separated) or 'all' "
+                         "(envs/ocean_host.py registry), trained through "
+                         "bridge.wrap on the host tier")
     ap.add_argument("--updates-per-launch", "-K", type=int, default=1,
                     help="fused updates per host dispatch (engine K)")
     ap.add_argument("--arch", default=None)
@@ -53,6 +58,43 @@ def main():
     if args.conformance and not args.ocean:
         ap.error("--conformance requires --ocean <name(s)|all>")
 
+    if args.host_env or args.engine_backend == "host":
+        # third-party host envs through the bridge, async host tier
+        from repro.bridge import make_host_engine
+        from repro.configs.ocean import ocean_tcfg, preset
+        from repro.envs.ocean_host import OCEAN_HOST
+        if not args.host_env:
+            ap.error("--engine-backend host requires --host-env "
+                     "<name(s)|all>")
+        if args.engine_backend not in (None, "host"):
+            ap.error(f"--host-env runs on the host tier; got "
+                     f"--engine-backend {args.engine_backend} (bridged "
+                     f"host envs cannot run inside jit/shard_map/pool)")
+        if args.updates_per_launch != 1:
+            ap.error("-K/--updates-per-launch is a fused-scan knob; the "
+                     "host tier dispatches one update per trajectory (K=1)")
+        names = list(OCEAN_HOST) if args.host_env == "all" \
+            else [n.strip() for n in args.host_env.split(",")]
+        for name in names:
+            p = preset(name)
+            tcfg = ocean_tcfg(name, checkpoint_dir=args.ckpt_dir,
+                              engine_backend="host", updates_per_launch=1)
+            eng = make_host_engine(OCEAN_HOST[name], tcfg, hidden=p.hidden,
+                                   recurrent=p.recurrent, seed=args.seed)
+            steps = args.total_env_steps or p.total_steps
+            print(f"=== host/{name} (M={eng.hvec.num_envs} "
+                  f"N={eng.hvec.batch_envs}) ===")
+            try:
+                hist, solved = eng.run(steps,
+                                       target_score=p.target_score)
+            finally:
+                eng.close()
+            m = solved if solved is not None else hist[-1]
+            status = "SOLVED" if m["score"] >= p.target_score else "unsolved"
+            print(f"  -> {status} score={m['score']:.3f} "
+                  f"steps={m['env_steps']} sps={m['sps']:.0f}")
+        return
+
     if args.ocean:
         from repro.envs.ocean import OCEAN
         from repro.rl.trainer import Trainer
@@ -65,7 +107,7 @@ def main():
         for name in names:
             p = preset(name)
             tcfg = ocean_tcfg(name, checkpoint_dir=args.ckpt_dir,
-                              engine_backend=args.engine_backend,
+                              engine_backend=args.engine_backend or "jit",
                               updates_per_launch=args.updates_per_launch)
             tr = Trainer(OCEAN[name](), tcfg, hidden=p.hidden,
                          recurrent=p.recurrent, conv=p.conv, seed=args.seed)

@@ -9,7 +9,7 @@ shape ``(K, n_metrics)`` that is fetched once per launch — dispatch latency
 and host sync amortize K-fold, which is exactly what dominates the
 small-unroll Ocean regime the paper benchmarks.
 
-Three execution tiers behind one ``run(total_steps)`` API:
+Four execution tiers behind one ``run(total_steps)`` API:
 
   * ``jit``       — single device; K = 1 is the classic one-update-per-
                     dispatch loop, K > 1 the fused multi-update scan.
@@ -24,6 +24,14 @@ Three execution tiers behind one ``run(total_steps)`` API:
   * ``pool``      — the double-buffered async host loop (core/pool.py) for
                     host-bound envs: while the learner consumes buffer i,
                     buffer i+1's env step is already on the device queue.
+  * ``host``      — bridged third-party host envs (bridge/): a first-
+                    finisher ``HostVecEnv`` steps M = 2N envs on worker
+                    threads while jitted inference + the same
+                    ``make_ocean_learn`` update stay device-resident.
+                    Rollout fragments accumulate *per env* keyed by the
+                    pool's ``env_ids``, so GAE bootstraps and recurrent
+                    carries stay per-env correct even though every batch is
+                    a different first-finisher subset.
 
 Checkpointing, ``target_score`` early-exit, and metric logging are host
 callbacks that fire at launch boundaries.
@@ -94,9 +102,9 @@ class TrainEngine:
         self.env, self.policy, self.tcfg, self.dist = env, policy, tcfg, dist
         self.backend = backend or tcfg.engine_backend
         self.K = updates_per_launch or tcfg.updates_per_launch
-        if self.backend not in ("jit", "shard_map", "pool"):
+        if self.backend not in ("jit", "shard_map", "pool", "host"):
             raise ValueError(f"unknown engine backend {self.backend!r}; "
-                             f"expected jit | shard_map | pool")
+                             f"expected jit | shard_map | pool | host")
         if self.K < 1:
             raise ValueError(f"updates_per_launch must be >= 1, got {self.K}")
         self.key = key
@@ -108,6 +116,30 @@ class TrainEngine:
         if self.backend != "shard_map" and mesh is not None:
             raise ValueError(f"mesh is only meaningful for the shard_map "
                              f"tier, not backend={self.backend!r}")
+        if self.backend == "host":
+            if self.K != 1:
+                raise ValueError(
+                    f"updates_per_launch={self.K} is a fused-scan knob; the "
+                    f"host tier dispatches one update per collected "
+                    f"trajectory (K=1)")
+            for attr in ("recv", "send", "batch_envs", "num_agents"):
+                if not hasattr(env, attr):
+                    raise ValueError(
+                        "backend='host' takes a bridge.HostVecEnv (see "
+                        "bridge.wrap / bridge.make_host_engine), got "
+                        f"{type(env).__name__} without {attr!r}")
+            if env.batch_envs != tcfg.num_envs:
+                raise ValueError(
+                    f"HostVecEnv batches {env.batch_envs} envs but "
+                    f"tcfg.num_envs={tcfg.num_envs}; size the bridge batch "
+                    f"to the training config")
+            self.hvec = self.vec = env
+            self.rc = None
+            self.num_shards = 1
+            self._learn = jax.jit(make_ocean_learn(
+                policy, tcfg, dist, kernel_mode=kernel_mode))
+            self._act = jax.jit(self._make_act())
+            return
         if self.backend == "pool":
             if self.K != 1:
                 raise ValueError(
@@ -226,6 +258,9 @@ class TrainEngine:
         if self.backend == "pool":
             return self._run_pool(total_steps, target_score=target_score,
                                   on_update=on_update, on_launch=on_launch)
+        if self.backend == "host":
+            return self._run_host(total_steps, target_score=target_score,
+                                  on_update=on_update, on_launch=on_launch)
         spu = self.steps_per_update
         num_updates = max(1, total_steps // spu)
         history, pending, solved = [], deque(), None
@@ -288,6 +323,27 @@ class TrainEngine:
             return value
         return boot
 
+    def _metrics_drainer(self, pending, history, spu, t0, on_update,
+                         target_score, st):
+        """Shared pool/host-tier drain: fetch one update's metrics (blocks
+        only on that update's learn, not on later dispatched work), stamp
+        env_steps/sps, fire ``on_update``, and latch the solving update into
+        ``st["solved"]``."""
+        def drain_one():
+            uu, m = pending.popleft()
+            md = {k: float(v) for k, v in
+                  zip(METRIC_KEYS, jax.device_get([m[k] for k in
+                                                   METRIC_KEYS]))}
+            md["env_steps"] = (uu + 1) * spu
+            md["sps"] = md["env_steps"] / (time.perf_counter() - t0)
+            history.append(md)
+            if on_update is not None:
+                on_update(uu, md)
+            if (target_score is not None and st["solved"] is None
+                    and md["episodes"] > 0 and md["score"] >= target_score):
+                st["solved"] = md
+        return drain_one
+
     def _run_pool(self, total_steps, *, target_score=None, on_update=None,
                   on_launch=None):
         """Host loop over the double-buffered pool. The trajectory for each
@@ -303,40 +359,25 @@ class TrainEngine:
         carry = [self.policy.initial_carry(B) for _ in range(nb)]
         carry0 = [self.policy.initial_carry(B) for _ in range(nb)]
         recs = [[] for _ in range(nb)]
-        history, pending, solved = [], deque(), None
+        history, pending, st = [], deque(), {"solved": None}
         t0 = time.perf_counter()
-
-        def drain_one():
-            # fetch one update's metrics (blocks only on that update's learn,
-            # not on later dispatched work)
-            nonlocal solved
-            uu, m = pending.popleft()
-            md = {k: float(v) for k, v in
-                  zip(METRIC_KEYS, jax.device_get([m[k] for k in
-                                                   METRIC_KEYS]))}
-            md["env_steps"] = (uu + 1) * spu
-            md["sps"] = md["env_steps"] / (time.perf_counter() - t0)
-            history.append(md)
-            if on_update is not None:
-                on_update(uu, md)
-            if (target_score is not None and solved is None
-                    and md["episodes"] > 0 and md["score"] >= target_score):
-                solved = md
+        drain_one = self._metrics_drainer(pending, history, spu, t0,
+                                          on_update, target_score, st)
 
         u = 0
-        while u < num_updates and solved is None:
+        while u < num_updates and st["solved"] is None:
             obs, rew, done, info, b = pool.recv()
             if recs[b]:
                 recs[b][-1] = recs[b][-1] + (rew, done, info)
             if len(recs[b]) == T and len(recs[b][-1]) == 8:
                 last_value = self._boot(self.ts.params, obs, carry[b], done)
                 cols = list(zip(*recs[b]))
-                st = lambda xs: jnp.stack(xs)
+                stk = lambda xs: jnp.stack(xs)
                 traj = Trajectory(
-                    obs=st(cols[0]), actions=st(cols[1]),
-                    logprobs=st(cols[2]), values=st(cols[3]),
-                    rewards=st(cols[5]), dones=st(cols[6]),
-                    resets=st(cols[4]),
+                    obs=stk(cols[0]), actions=stk(cols[1]),
+                    logprobs=stk(cols[2]), values=stk(cols[3]),
+                    rewards=stk(cols[5]), dones=stk(cols[6]),
+                    resets=stk(cols[4]),
                     infos=jax.tree.map(lambda *x: jnp.stack(x), *cols[7]))
                 self.key, kp = jax.random.split(self.key)
                 self.ts, m = self._learn(self.ts, carry0[b], traj,
@@ -365,4 +406,119 @@ class TrainEngine:
             pool.send(action, b)
         while pending:
             drain_one()
-        return history, solved
+        return history, st["solved"]
+
+    # -- host tier -------------------------------------------------------------
+    def close(self):
+        """Release host-side resources (worker threads of the host tier)."""
+        if self.backend == "host":
+            self.hvec.close()
+
+    def _run_host(self, total_steps, *, target_score=None, on_update=None,
+                  on_launch=None):
+        """First-finisher loop over the bridged ``HostVecEnv``: each recv is
+        the N (of M = pool_buffers·N) envs that finished stepping first;
+        while the device computes their actions, the other M−N envs keep
+        stepping on worker threads — the paper's EnvPool overlap with the
+        learner on device. Rollout fragments accumulate per env (keyed by
+        ``env_ids``), so every fragment is a contiguous T-step slice of one
+        env's experience with its own recurrent carry and GAE bootstrap; an
+        update fires whenever N fragments are ready, batching whichever envs
+        filled first."""
+        tcfg, hv = self.tcfg, self.hvec
+        T = tcfg.unroll_length
+        Nb, A = hv.batch_envs, hv.num_agents
+        spu = T * Nb * A
+        num_updates = max(1, total_steps // spu)
+        M = hv.num_envs
+        recurrent = self.policy.recurrent
+        carry = [self.policy.initial_carry(A) for _ in range(M)]
+        carry0 = [self.policy.initial_carry(A) for _ in range(M)]
+        recs = [[] for _ in range(M)]
+        ready = deque()
+        history, pending, st = [], deque(), {"solved": None}
+        t0 = time.perf_counter()
+        drain_one = self._metrics_drainer(pending, history, spu, t0,
+                                          on_update, target_score, st)
+
+        u = 0
+        while u < num_updates and st["solved"] is None:
+            obs, rew, done, info, ids = hv.recv(
+                timeout=tcfg.host_recv_timeout)
+            obs_e = obs.reshape(Nb, A, -1)
+            rew_e = rew.reshape(Nb, A)
+            done_e = done.reshape(Nb, A)
+            # complete each env's previous record with its step outcome
+            for j, i in enumerate(ids):
+                if recs[i]:
+                    inf = {k: info[k][j] for k in info}
+                    recs[i][-1] = recs[i][-1] + (rew_e[j], done_e[j], inf)
+            # act on the batch (device) while the other envs step (host)
+            cb = (jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                               *[carry[i] for i in ids])
+                  if recurrent else None)
+            self.key, ka = jax.random.split(self.key)
+            action, logp, value, pc = self._act(self.ts.params, obs, cb,
+                                                done, ka)
+            action = np.asarray(action)
+            act_e = action.reshape((Nb, A) + action.shape[1:])
+            logp_e = np.asarray(logp).reshape(Nb, A)
+            val_e = np.asarray(value).reshape(Nb, A)
+            # harvest full fragments (bootstrapped by this batch's values),
+            # then start each env's next fragment with this step
+            for j, i in enumerate(ids):
+                if len(recs[i]) == T and len(recs[i][-1]) == 8:
+                    ready.append((recs[i], carry0[i], val_e[j]))
+                    recs[i] = []
+                    carry0[i] = carry[i]
+                recs[i].append((obs_e[j], act_e[j], logp_e[j], val_e[j],
+                                done_e[j]))
+                if recurrent:
+                    carry[i] = jax.tree.map(
+                        lambda x, j=j: x[j * A:(j + 1) * A], pc)
+            hv.send(action, ids)
+            # one PPO update per Nb collected fragments
+            while (len(ready) >= Nb and u < num_updates
+                   and st["solved"] is None):
+                frags = [ready.popleft() for _ in range(Nb)]
+                traj, c0, last_value = self._stack_fragments(frags, T, A,
+                                                             recurrent)
+                self.key, kp = jax.random.split(self.key)
+                self.ts, m = self._learn(self.ts, c0, traj, last_value, kp)
+                pending.append((u, m))
+                u += 1
+                if on_launch is not None:
+                    on_launch(u)
+                if target_score is not None:
+                    while pending:
+                        drain_one()
+                elif len(pending) > 1:
+                    drain_one()
+        while pending:
+            drain_one()
+        return history, st["solved"]
+
+    @staticmethod
+    def _stack_fragments(frags, T, A, recurrent):
+        """N per-env fragments (each T steps of (A, …) rows) → one
+        (T, N·A)-batched Trajectory + per-row carry0 + bootstrap values."""
+        Nb = len(frags)
+        cols = [list(zip(*rec)) for rec, _c0, _bv in frags]
+
+        def field(k, dtype=None):
+            x = np.stack([np.stack(c[k]) for c in cols], axis=1)
+            x = x.reshape((T, Nb * A) + x.shape[3:])
+            return x if dtype is None else x.astype(dtype)
+
+        infos = {key: np.stack([np.stack([r[key] for r in c[7]])
+                                for c in cols], axis=1)
+                 for key in cols[0][7][0]}               # (T, Nb) per key
+        traj = Trajectory(
+            obs=field(0, np.float32), actions=field(1),
+            logprobs=field(2, np.float32), values=field(3, np.float32),
+            rewards=field(5, np.float32), dones=field(6, bool),
+            resets=field(4, bool), infos=infos)
+        c0 = (jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                           *[f[1] for f in frags]) if recurrent else None)
+        last_value = np.concatenate([np.asarray(f[2]) for f in frags])
+        return traj, c0, last_value

@@ -1,0 +1,486 @@
+"""HostBridge: wrap() API detection, HostPool hardening (crash propagation,
+seeded autoreset, close), first-finisher batching, the conformance host
+profile, and the TrainEngine ``host`` tier (incl. JAX-vs-host parity
+training). Every blocking call carries a timeout so a regression can never
+hang the suite."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bridge import (convert_space, detect_api, make_host_engine,
+                          np_emulate_obs, np_unemulate_action, wrap)
+from repro.configs.base import TrainConfig
+from repro.core import emulation as em
+from repro.core import spaces as sp
+from repro.core.host import HostEnvError, HostPool
+from repro.envs.ocean_host import (OCEAN_HOST, HostBandit, HostDrone,
+                                   HostSquared, HostTeam)
+
+RECV_T = 30.0          # generous per-call bound; hit only on regressions
+
+TCFG = TrainConfig(num_envs=8, unroll_length=8, update_epochs=1,
+                   num_minibatches=2, learning_rate=1e-3, gamma=0.95)
+
+
+# ---------------------------------------------------------------------------
+# helper envs
+
+class SlowEnv:
+    """Duck env whose step blocks long enough to trip small timeouts."""
+
+    def __init__(self, step_s: float = 30.0):
+        self.step_s = step_s
+        self.observation_space = sp.Box((1,))
+        self.action_space = sp.Discrete(2)
+
+    def reset(self, seed):
+        return np.zeros(1, np.float32)
+
+    def step(self, a):
+        time.sleep(self.step_s)
+        return np.zeros(1, np.float32), 0.0, False, {}
+
+
+class CrashyEnv:
+    """Duck env that raises on the k-th step (or on reset)."""
+
+    def __init__(self, crash_step: int = 3, crash_reset: bool = False):
+        self.crash_step, self.crash_reset = crash_step, crash_reset
+        self.observation_space = sp.Box((1,))
+        self.action_space = sp.Discrete(2)
+        self.t = 0
+
+    def reset(self, seed):
+        if self.crash_reset:
+            raise RuntimeError("reset kaboom")
+        self.t = 0
+        return np.zeros(1, np.float32)
+
+    def step(self, a):
+        self.t += 1
+        if self.t >= self.crash_step:
+            raise RuntimeError("step kaboom")
+        return np.zeros(1, np.float32), 1.0, False, {}
+
+
+class JitterEnv:
+    """Duck env with lognormal step latency (first-finisher tests)."""
+
+    def __init__(self, mean_ms=0.5, seed=0, horizon=64):
+        self.observation_space = sp.Box((2,))
+        self.action_space = sp.Discrete(2)
+        self.rng = np.random.RandomState(seed)
+        self.mean_ms, self.horizon, self.t = mean_ms, horizon, 0
+
+    def reset(self, seed):
+        self.t = 0
+        return np.zeros(2, np.float32)
+
+    def step(self, a):
+        time.sleep(self.rng.lognormal(np.log(self.mean_ms), 0.6) / 1e3)
+        self.t += 1
+        done = self.t >= self.horizon
+        return np.zeros(2, np.float32), 0.0, done, {}
+
+
+# ---------------------------------------------------------------------------
+# wrap(): API detection + space conversion
+
+def test_detect_api_three_styles():
+    assert detect_api(HostBandit()) == "duck"
+    assert detect_api(HostSquared()) == "duck"
+    assert detect_api(HostDrone()) == "gymnasium"
+    assert detect_api(HostTeam()) == "pettingzoo"
+
+
+def test_convert_space_duck_objects():
+    class N:                     # gymnasium-shaped duck objects
+        n = 5
+
+    class MD:
+        nvec = np.array([2, 3])
+
+    class B:
+        shape, dtype = (4, 2), np.float32
+        low, high = -1.0, 1.0
+
+    assert convert_space(N()) == sp.Discrete(5)
+    assert convert_space(MD()) == sp.MultiDiscrete((2, 3))
+    b = convert_space(B())
+    assert isinstance(b, sp.Box) and b.shape == (4, 2)
+    assert convert_space(sp.Discrete(3)) == sp.Discrete(3)   # passthrough
+
+
+def test_np_emulation_matches_jax_specs():
+    """The numpy pack/unpack twins follow the exact FlatSpec/ActionSpec
+    layouts of core/emulation."""
+    space = sp.Dict({"image": sp.Box((3, 3)), "flat": sp.Box((4,))})
+    spec = em.flat_spec(space, "f32")
+    x = {"image": np.arange(9, dtype=np.float32).reshape(3, 3),
+         "flat": np.arange(4, dtype=np.float32)}
+    flat = np_emulate_obs(spec, x)
+    jflat = np.asarray(em.emulate(spec, x))
+    np.testing.assert_array_equal(flat, jflat)
+
+    aspace = sp.Dict({"a": sp.Discrete(2), "b": sp.MultiDiscrete((3, 4))})
+    aspec = em.action_spec(aspace)
+    tree = np_unemulate_action(aspec, np.asarray([1, 2, 3]))
+    assert tree["a"] == 1 and isinstance(tree["a"], int)
+    np.testing.assert_array_equal(tree["b"], [2, 3])
+
+
+def test_wrap_duck_api():
+    v = wrap(HostBandit, num_envs=3)
+    try:
+        assert v.is_sync and v.batch_size == 3
+        obs = v.reset(timeout=RECV_T)
+        assert obs.shape == (3, 1) and obs.dtype == np.float32
+        assert v.action_space == sp.MultiDiscrete((4,))
+        obs, rew, done, info = v.step(np.zeros((3, 1), np.int32),
+                                      timeout=RECV_T)
+        assert rew.shape == (3,) and done.dtype == bool
+    finally:
+        v.close()
+
+
+def test_wrap_gymnasium_api():
+    v = wrap(HostDrone, num_envs=2)
+    try:
+        assert isinstance(v.action_space, sp.Box)      # Gaussian-head case
+        assert v.obs_dim == 6 and v.act_spec.cont_dim == 3
+        v.reset(timeout=RECV_T)
+        obs, rew, done, info = v.step(np.zeros((2, 3), np.float32),
+                                      timeout=RECV_T)
+        assert obs.shape == (2, 6) and np.all(np.isfinite(obs))
+    finally:
+        v.close()
+
+
+def test_wrap_pettingzoo_api_agent_major_rows():
+    v = wrap(HostTeam, num_envs=2)
+    try:
+        assert v.num_agents == 2 and v.batch_size == 4
+        obs = v.reset(timeout=RECV_T)
+        # rows alternate agent0, agent1 in canonical order (one-hot ids)
+        np.testing.assert_array_equal(obs[::2, 0], 1.0)
+        np.testing.assert_array_equal(obs[1::2, 1], 1.0)
+        act = np.tile(np.asarray([[0], [1]], np.int32), (2, 1))
+        obs, rew, done, info = v.step(act, timeout=RECV_T)
+        np.testing.assert_allclose(rew, 1.0)    # each agent matched its id
+    finally:
+        v.close()
+
+
+def test_wrap_real_gymnasium_env():
+    """End-to-end on an actual gymnasium env (not a mirror) when the
+    library is installed — the paper's one-line claim on foreign code."""
+    gymnasium = pytest.importorskip("gymnasium")
+    v = wrap(lambda: gymnasium.make("CartPole-v1"), num_envs=2)
+    try:
+        assert v.obs_dim == 4 and v.action_space == sp.MultiDiscrete((2,))
+        obs = v.reset(timeout=RECV_T)
+        assert obs.shape == (2, 4)
+        for _ in range(5):
+            obs, rew, done, info = v.step(
+                np.zeros((2, 1), np.int32), timeout=RECV_T)
+        assert np.all(np.isfinite(obs)) and rew.dtype == np.float32
+    finally:
+        v.close()
+
+
+def test_wrap_instance_requires_factory_for_many():
+    with pytest.raises(ValueError, match="factory"):
+        wrap(HostBandit(), num_envs=2)
+    v = wrap(HostBandit(), num_envs=1)          # instance OK for one env
+    try:
+        assert v.reset(timeout=RECV_T).shape == (1, 1)
+    finally:
+        v.close()
+
+
+# ---------------------------------------------------------------------------
+# pool semantics
+
+def test_first_finisher_batching():
+    """M=2N jittered envs: batches are N distinct envs, every env gets
+    served (no starvation), ids are sorted."""
+    v = wrap(lambda: JitterEnv(), num_envs=6, batch_size=3, seed=0)
+    seen = set()
+    try:
+        for _ in range(16):
+            obs, rew, done, info, ids = v.recv(timeout=RECV_T)
+            assert len(ids) == 3 and len(set(ids.tolist())) == 3
+            assert sorted(ids.tolist()) == ids.tolist()
+            seen.update(int(i) for i in ids)
+            v.send(np.zeros((3, 1), np.int32), ids)
+    finally:
+        v.close()
+    assert seen == set(range(6))
+
+
+def test_sync_degradation_deterministic_rows():
+    """M == N waits for everyone: every batch is exactly envs 0..M-1."""
+    v = wrap(lambda: JitterEnv(), num_envs=4, seed=0)
+    try:
+        for _ in range(6):
+            obs, rew, done, info, ids = v.recv(timeout=RECV_T)
+            np.testing.assert_array_equal(ids, np.arange(4))
+            v.send(np.zeros((4, 1), np.int32), ids)
+    finally:
+        v.close()
+
+
+def test_crash_propagation_step():
+    v = wrap(lambda: CrashyEnv(crash_step=2), num_envs=2)
+    try:
+        v.reset(timeout=RECV_T)
+        with pytest.raises(HostEnvError, match=r"env [01] raised in step"):
+            for _ in range(4):
+                v.step(np.zeros((2, 1), np.int32), timeout=RECV_T)
+    finally:
+        v.close()
+
+
+def test_crash_propagation_reset():
+    pool = HostPool([lambda: CrashyEnv(crash_reset=True)], batch_size=1)
+    try:
+        with pytest.raises(HostEnvError, match="reset"):
+            pool.recv(timeout=RECV_T)
+    finally:
+        pool.close()
+
+
+def test_recv_timeout_guard():
+    v = wrap(lambda: SlowEnv(step_s=30.0), num_envs=1)
+    try:
+        v.reset(timeout=RECV_T)
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError, match="0/1 envs ready"):
+            v.step(np.zeros((1, 1), np.int32), timeout=0.2)
+        assert time.monotonic() - t0 < 5.0
+    finally:
+        v.close(timeout=0.5)    # worker mid-sleep: close must still return
+
+
+def test_close_joins_idle_workers():
+    """close() drains inboxes and posts the sentinel, so idle workers join
+    promptly; double close is a no-op."""
+    v = wrap(HostBandit, num_envs=4)
+    v.reset(timeout=RECV_T)
+    t0 = time.monotonic()
+    v.close(timeout=5.0)
+    assert time.monotonic() - t0 < 5.0
+    assert not any(t.is_alive() for t in v.pool._threads)
+    v.close()                                   # idempotent
+
+
+def test_close_with_undelivered_commands():
+    """A pending inbox command must not wedge close() (the old put_nowait on
+    a full Queue(1) silently skipped the close sentinel)."""
+    pool = HostPool([lambda: SlowEnv(step_s=0.3)], batch_size=1)
+    pool.recv(timeout=RECV_T)
+    pool.send(np.zeros(1), np.asarray([0]))     # worker begins a slow step
+    pool.send(np.zeros(1), np.asarray([0]))     # second command sits queued
+    t0 = time.monotonic()
+    pool.close(timeout=5.0)
+    assert time.monotonic() - t0 < 5.0
+    time.sleep(0.5)                             # step finishes, sentinel read
+    assert not any(t.is_alive() for t in pool._threads)
+
+
+def test_seed_determinism_across_autoreset():
+    """Same-seed wrappers replay identical reward streams across episode
+    boundaries (the per-env autoreset seed sequence); different seeds
+    diverge."""
+    def stream(seed):
+        v = wrap(HostBandit, num_envs=2, seed=seed)
+        try:
+            v.reset(timeout=RECV_T)
+            rows = []
+            for _ in range(40):                 # horizon 16 → crosses resets
+                _o, rew, _d, _i = v.step(np.full((2, 1), 3, np.int32),
+                                         timeout=RECV_T)
+                rows.append(rew.copy())
+        finally:
+            v.close()
+        return np.stack(rows)
+
+    a, b, c = stream(0), stream(0), stream(1)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_terminal_info_surfaced():
+    """Autoreset surfaces episode stats exactly at episode end, valid==done,
+    with the env's normalized score — the old pool discarded all of it."""
+    v = wrap(HostBandit, num_envs=2, seed=3)
+    try:
+        v.reset(timeout=RECV_T)
+        rets = np.zeros(2)
+        for t in range(16):
+            _o, rew, done, info = v.step(np.full((2, 1), 3, np.int32),
+                                         timeout=RECV_T)
+            rets += rew
+            if t < 15:
+                assert not info["valid"].any() and not done.any()
+        assert done.all() and info["valid"].all()
+        np.testing.assert_array_equal(info["episode_length"], 16)
+        np.testing.assert_allclose(info["episode_return"], rets)
+        np.testing.assert_allclose(
+            info["score"], np.minimum(1.0, rets / (16 * 0.9)), rtol=1e-6)
+        # next episode: counters restarted
+        _o, rew, done, info = v.step(np.full((2, 1), 3, np.int32),
+                                     timeout=RECV_T)
+        assert not info["valid"].any()
+    finally:
+        v.close()
+
+
+# ---------------------------------------------------------------------------
+# conformance host profile
+
+@pytest.mark.parametrize("name", sorted(OCEAN_HOST))
+def test_host_profile_conformance(name):
+    from repro.envs.conformance import check_host_env
+    cls = OCEAN_HOST[name]
+    report = check_host_env(lambda: wrap(cls, num_envs=2),
+                            name=f"host/{name}")
+    assert report.ok, report.summary()
+
+
+def test_host_profile_catches_broken_env():
+    """Negative control: an env whose autoreset ignores the seed must fail
+    the determinism check."""
+    class Unseeded:
+        horizon = 4
+
+        def __init__(self):
+            self.observation_space = sp.Box((1,))
+            self.action_space = sp.Discrete(2)
+            self.t = 0
+
+        def reset(self, seed):
+            self.t = 0
+            return np.zeros(1, np.float32)
+
+        def step(self, a):
+            self.t += 1
+            rew = float(np.random.random())     # hidden host randomness
+            return np.zeros(1, np.float32), rew, self.t >= 4, {}
+
+    from repro.envs.conformance import check_host_env
+    report = check_host_env(lambda: wrap(Unseeded, num_envs=2),
+                            name="host/unseeded")
+    bad = {r.name for r in report.results if not r.ok}
+    assert "host_determinism" in bad, report.summary()
+
+
+# ---------------------------------------------------------------------------
+# TrainEngine host tier
+
+def test_engine_host_tier_smoke():
+    e = make_host_engine(HostBandit, TCFG, hidden=16, kernel_mode="ref")
+    try:
+        assert e.hvec.num_envs == 2 * TCFG.num_envs     # M = 2N default
+        hist, solved = e.run(3 * e.steps_per_update)
+        assert solved is None and len(hist) == 3
+        assert [h["env_steps"] for h in hist] == \
+            [(i + 1) * e.steps_per_update for i in range(3)]
+        assert all(np.isfinite(h["loss"]) for h in hist)
+    finally:
+        e.close()
+
+
+def test_engine_host_tier_recurrent():
+    e = make_host_engine(HostSquared, TCFG, hidden=16, recurrent=True,
+                         kernel_mode="ref")
+    try:
+        hist, _ = e.run(2 * e.steps_per_update)
+        assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
+    finally:
+        e.close()
+
+
+def test_engine_host_tier_multiagent():
+    tcfg = TrainConfig(num_envs=4, unroll_length=8, update_epochs=1,
+                       num_minibatches=2, learning_rate=1e-3, gamma=0.95)
+    e = make_host_engine(HostTeam, tcfg, hidden=16, kernel_mode="ref")
+    try:
+        assert e.batch_size == 8                # 4 envs × 2 agent rows
+        hist, _ = e.run(2 * e.steps_per_update)
+        assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
+    finally:
+        e.close()
+
+
+def test_engine_host_tier_target_score_early_exit():
+    e = make_host_engine(HostBandit, TCFG, hidden=16, kernel_mode="ref")
+    try:
+        hist, solved = e.run(400 * e.steps_per_update, target_score=0.3)
+        assert solved is not None and solved["score"] >= 0.3
+        assert len(hist) < 400
+    finally:
+        e.close()
+
+
+def test_engine_host_tier_validation():
+    from repro.models.policy import OceanPolicy
+    from repro.rl.distributions import Dist
+    from repro.rl.engine import TrainEngine
+    from repro.core.emulation import Emulated
+    from repro.envs.ocean import Bandit
+
+    # K > 1 rejected
+    tcfg_k = TrainConfig(num_envs=8, unroll_length=8, updates_per_launch=4)
+    with pytest.raises(ValueError, match="host tier"):
+        make_host_engine(HostBandit, tcfg_k, hidden=16)
+    # a JAX env is not a HostVecEnv
+    em_env = Emulated(Bandit())
+    dist = Dist("categorical", nvec=em_env.act_spec.nvec)
+    pol = OceanPolicy(em_env.obs_spec.total, dist.nvec, hidden=16,
+                      num_outputs=dist.num_outputs)
+    with pytest.raises(ValueError, match="HostVecEnv"):
+        TrainEngine(em_env, pol, TCFG, dist, key=jax.random.PRNGKey(0),
+                    backend="host")
+    # batch size must match the training config
+    v = wrap(HostBandit, num_envs=4)
+    try:
+        with pytest.raises(ValueError, match="num_envs"):
+            TrainEngine(v, pol, TCFG, dist, key=jax.random.PRNGKey(0),
+                        backend="host")
+    finally:
+        v.close()
+
+
+def test_async_beats_sync_under_jitter():
+    """The EnvPool claim through the whole bridge: first N of M=2N finishers
+    ≥ 30% faster than wait-for-all on jittered envs."""
+    from benchmarks.bench_bridge import run_once
+    sync = run_once(M=4, N=4, steps=40)
+    pool = run_once(M=8, N=4, steps=40)
+    assert pool > 1.3 * sync, (sync, pool)
+
+
+@pytest.mark.slow
+def test_host_bandit_parity_with_jit_tier():
+    """The acceptance cell: the bridged numpy bandit trains to the same
+    solved score as the JAX bandit on the jit tier under identical training
+    params — the mirror env and the bridge change nothing about learning."""
+    from repro.envs.ocean import Bandit
+    from repro.rl.trainer import Trainer
+    tcfg = TrainConfig(num_envs=32, unroll_length=32, update_epochs=4,
+                       num_minibatches=4, learning_rate=1e-3, gamma=0.95)
+    e = make_host_engine(HostBandit, tcfg, hidden=64, kernel_mode="ref",
+                         seed=0)
+    try:
+        hist, solved = e.run(400_000, target_score=0.9)
+    finally:
+        e.close()
+    assert solved is not None, f"host bandit unsolved: {hist[-1]}"
+    assert solved["score"] > 0.9
+
+    tr = Trainer(Bandit(), tcfg, hidden=64, kernel_mode="ref", seed=0)
+    m = tr.train(400_000, target_score=0.9)
+    assert m["score"] > 0.9, f"jit bandit unsolved: {m}"

@@ -119,7 +119,7 @@ def test_host_pool_delivers_all_envs():
                     batch_size=3)
     seen = set()
     for _ in range(12):
-        obs, rew, done, ids = pool.recv()
+        obs, rew, done, info, ids = pool.recv(timeout=30)
         seen.update(int(i) for i in ids)
         pool.send(np.zeros(3), ids)
     pool.close()
