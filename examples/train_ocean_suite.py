@@ -1,25 +1,40 @@
-"""End-to-end driver: train the whole Ocean suite (paper §4 + Ocean II) —
-every env solved >0.9 with its committed preset, under a coffee break total.
+"""End-to-end driver: train the whole Ocean suite (paper §4 + Ocean II +
+the league's duel) — every env solved >0.9 with its committed preset, under
+a coffee break total. Competitive envs train under league self-play and
+their solved criterion is winrate vs the random baseline (self-play score
+is pinned near 0.5 by the zero-sum symmetry).
 
   PYTHONPATH=src python examples/train_ocean_suite.py
 """
+import tempfile
 import time
 
 from repro.configs.ocean import ocean_tcfg, preset
 from repro.envs.ocean import OCEAN
+from repro.league import run_selfplay
 from repro.rl.trainer import Trainer
+
+SELFPLAY = ("duel",)                 # competitive envs: league self-play
 
 t_all = time.perf_counter()
 results = {}
 for name, cls in OCEAN.items():
     t0 = time.perf_counter()
     p = preset(name)
-    tr = Trainer(cls(), ocean_tcfg(name, updates_per_launch=4),
-                 hidden=p.hidden, recurrent=p.recurrent, conv=p.conv)
-    m = tr.train(p.total_steps, target_score=p.target_score)
-    results[name] = m
-    print(f"{name:12s} {'SOLVED' if m['score'] >= 0.9 else 'FAILED':6s} "
-          f"score={m['score']:.3f} steps={m['env_steps']:7d} "
-          f"({time.perf_counter() - t0:.0f}s)")
-n = sum(m["score"] >= 0.9 for m in results.values())
+    if name in SELFPLAY:
+        with tempfile.TemporaryDirectory() as d:
+            res = run_selfplay(cls(), ocean_tcfg(name, updates_per_launch=4),
+                               league_dir=d, total_steps=p.total_steps,
+                               snapshot_every=8, hidden=p.hidden,
+                               recurrent=p.recurrent)
+        score = res.winrate_random
+    else:
+        tr = Trainer(cls(), ocean_tcfg(name, updates_per_launch=4),
+                     hidden=p.hidden, recurrent=p.recurrent, conv=p.conv)
+        score = tr.train(p.total_steps, target_score=p.target_score)["score"]
+    results[name] = score
+    crit = "winrate" if name in SELFPLAY else "score"
+    print(f"{name:12s} {'SOLVED' if score >= 0.9 else 'FAILED':6s} "
+          f"{crit}={score:.3f} ({time.perf_counter() - t0:.0f}s)")
+n = sum(s >= 0.9 for s in results.values())
 print(f"\n{n}/{len(results)} solved in {time.perf_counter() - t_all:.0f}s")

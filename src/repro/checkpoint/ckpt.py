@@ -73,8 +73,10 @@ def _slice_spec(idx, shape):
 
 
 def save(directory: str, tree, step: Optional[int] = None,
-         async_: bool = False, keep: int = 3):
-    """Save ``tree``. Returns the committed path (or a join handle if async)."""
+         async_: bool = False, keep: Optional[int] = 3):
+    """Save ``tree``. Returns the committed path (or a join handle if async).
+    ``keep=None`` disables GC — every step is kept (the policy-league store
+    is an archive, not a ring buffer)."""
     leaves, _ = _flatten(tree)
     names = _names(tree)
     step = int(step if step is not None else _next_step(directory))
@@ -115,7 +117,8 @@ def save(directory: str, tree, step: Optional[int] = None,
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)            # atomic commit
-        _gc(directory, keep)
+        if keep is not None:
+            _gc(directory, keep)
 
     if async_:
         t = threading.Thread(target=_write, daemon=True)

@@ -51,6 +51,10 @@ OCEAN_PRESETS = {
                            tcfg_overrides=(("ent_coef", 0.003),)),
     "maze": OceanPreset(total_steps=1_000_000,   # procgen: fresh maze/episode
                         tcfg_overrides=(("gamma", 0.98),)),
+    # Policy League — duel trains under self-play (launch.train --selfplay):
+    # score vs the frozen pool hovers near 0.5 by construction, so the
+    # solved criterion is arena winrate vs the random baseline, not score
+    "duel": OceanPreset(total_steps=300_000, target_score=0.9),
 }
 
 

@@ -628,6 +628,153 @@ HOST_CHECKS = {
 }
 
 
+# ---------------------------------------------------------------------------
+# selfplay profile — the contract competitive (league) envs add on top of
+# the base profile
+#
+# The Policy League's arena and the engine's selfplay mode assume three
+# invariants the base checks can't see: matches are zero-sum (the reward
+# vector sums to 0 at every step, so one side's score is the other's loss),
+# roles are symmetric under the agent-row permutation (training as row 0 is
+# no different from training as row 1 — ``swap_agents`` is the env-declared
+# permutation), and episodes are team-consistent (one episode-scoped scalar
+# done: no agent's episode outlives another's, so a match has one outcome).
+
+def _rollout_states(env, key, steps):
+    """(state, action, key) triples along a random rollout with resets."""
+    s = env.init(key)
+    s, _ = env.reset(s, key)
+    for t in range(steps):
+        a = _sample_action(env, jax.random.fold_in(key, t))
+        kt = jax.random.fold_in(key, 1000 + t)
+        yield s, a, kt
+        s, _obs, _rew, done, _info = env.step(s, a, kt)
+        if bool(done):
+            s, _ = env.reset(s, jax.random.fold_in(key, 2000 + t))
+
+
+def check_zero_sum(env, key) -> list:
+    if env.num_agents < 2:
+        return [f"selfplay profile needs a multi-agent env "
+                f"(num_agents={env.num_agents})"]
+    steps = min(2 * _horizon(env) + 2, 80)   # spans >= 1 episode boundary
+    for t, (s, a, kt) in enumerate(_rollout_states(env, key, steps)):
+        _s2, _obs, rew, _done, _info = env.step(s, a, kt)
+        tot = float(jnp.sum(rew))
+        if abs(tot) > 1e-5:
+            return [f"reward vector sums to {tot:+.6f} at step {t} "
+                    f"(rewards {np.asarray(rew)}); a competitive env must "
+                    f"be zero-sum at every step"]
+    return []
+
+
+def check_role_swap(env, key, steps: int = 0) -> list:
+    """Stepping the agent-row-reversed state with reversed actions must give
+    the reversed outputs: obs/reward rows reversed, same done, and the next
+    state equal to ``swap_agents`` of the unswapped next state. The env
+    declares the permutation via ``swap_agents(state)``."""
+    if not hasattr(env, "swap_agents"):
+        return ["competitive envs must expose swap_agents(state) — the "
+                "agent-row permutation the role-swap symmetry is checked "
+                "under"]
+    rev = lambda x: jax.tree.map(lambda v: v[::-1], x)
+    out = []
+    steps = steps or min(2 * _horizon(env) + 2, 80)
+    for t, (s, a, kt) in enumerate(_rollout_states(env, key, steps)):
+        s2, obs, rew, done, info = env.step(s, a, kt)
+        s2w, obsw, reww, donew, infow = env.step(env.swap_agents(s), rev(a),
+                                                 kt)
+        if not _trees_equal(obsw, rev(obs)):
+            out.append(f"swapped-role obs is not the row-reversed obs at "
+                       f"step {t}")
+        if not bool(jnp.all(jnp.abs(reww - rew[::-1]) < 1e-6)):
+            out.append(f"swapped-role reward is not the row-reversed "
+                       f"reward at step {t}: {np.asarray(reww)} vs "
+                       f"{np.asarray(rew[::-1])}")
+        if bool(donew) != bool(done):
+            out.append(f"swapped-role done disagrees at step {t}")
+        if not _trees_equal(s2w, env.swap_agents(s2)):
+            out.append(f"swapped-role next state != swap_agents(next "
+                       f"state) at step {t}")
+        if out:
+            return out
+        # side-0-centric score must mirror at episode end
+        if bool(done):
+            sc, scw = float(info["score"]), float(infow["score"])
+            if abs((1.0 - sc) - scw) > 1e-5:
+                return [f"score is not side-0-centric: swap gives "
+                        f"{scw:.6f}, expected 1 - {sc:.6f} (the arena "
+                        f"reads score > 0.5 as a side-A win)"]
+    return []
+
+
+def check_team_done(env, key, episodes: int = 2) -> list:
+    """One match, one outcome: done is an episode-scoped scalar shared by
+    every agent row (no per-agent/per-team early termination), and the
+    terminal info row fires exactly once per episode."""
+    out = []
+    H = _horizon(env)
+    for e in range(episodes):
+        s = env.init(jax.random.fold_in(key, e))
+        s, _ = env.reset(s, jax.random.fold_in(key, 50 + e))
+        ends = 0
+        for t in range(2 * H):
+            a = _sample_action(env, jax.random.fold_in(key, e * 71 + t))
+            s, _obs, rew, done, info = env.step(
+                s, a, jax.random.fold_in(key, e * 113 + t))
+            if jnp.shape(done) != ():
+                return [f"done shape {jnp.shape(done)} is per-agent; all "
+                        f"rows of a match must terminate together "
+                        f"(episode-scoped scalar done)"]
+            if jnp.shape(rew) != (env.num_agents,):
+                return [f"reward shape {jnp.shape(rew)} != "
+                        f"({env.num_agents},): every agent row needs its "
+                        f"side of the zero-sum transfer"]
+            ends += int(bool(info["valid"]))
+            if bool(done):
+                break
+        else:
+            out.append(f"episode {e} never terminated within 2×horizon")
+            continue
+        if ends != 1:
+            out.append(f"episode {e}: terminal info fired {ends} times "
+                       f"(must fire exactly once, at the shared episode "
+                       f"end)")
+    return out
+
+
+SELFPLAY_CHECKS = {
+    "zero_sum": check_zero_sum,
+    "role_swap": check_role_swap,
+    "team_done": check_team_done,
+}
+
+
+def check_selfplay_env(env_or_name, *, seed: int = 0,
+                       checks: Optional[list] = None) -> ConformanceReport:
+    """Run the selfplay (competitive-env) profile — zero-sum rewards,
+    role-swap symmetry under agent-row permutation, and team-consistent
+    termination — against an env instance or OCEAN registry name. Same
+    report semantics as ``check_env``; league workloads should pass BOTH
+    profiles (the base one still governs jit/vmap/emulation purity)."""
+    if isinstance(env_or_name, str):
+        from repro.envs.ocean import OCEAN
+        name, env = env_or_name, OCEAN[env_or_name]()
+    else:
+        env, name = env_or_name, type(env_or_name).__name__
+    key = jax.random.PRNGKey(seed)
+    report = ConformanceReport(env_name=f"selfplay/{name}")
+    for cname in (checks or SELFPLAY_CHECKS):
+        fn = SELFPLAY_CHECKS[cname]
+        try:
+            violations = fn(env, key)
+        except Exception as e:   # noqa: BLE001 — report, don't crash
+            violations = [f"check raised {type(e).__name__}: {e}"]
+        report.results.append(
+            CheckResult(cname, not violations, tuple(violations)))
+    return report
+
+
 def check_host_env(factory, *, name: str = None,
                    seed: int = 0, checks: Optional[list] = None
                    ) -> ConformanceReport:
@@ -649,12 +796,25 @@ def check_host_env(factory, *, name: str = None,
     return report
 
 
-def run_cli(env_arg: str, seed: int = 0, host: bool = False) -> int:
+def run_cli(env_arg: str, seed: int = 0, host: bool = False,
+            selfplay: bool = False) -> int:
     """Check 'all' or a comma-separated name list against the registry,
     print each report, return a process exit code (1 on any violation).
     Shared by this module's __main__ and ``launch.train --conformance``.
     With ``host=True`` the names come from the ``OCEAN_HOST`` mirror
-    registry and run the host profile through ``bridge.wrap``."""
+    registry and run the host profile through ``bridge.wrap``; with
+    ``selfplay=True`` the competitive-env profile runs instead of the base
+    one."""
+    if selfplay:
+        from repro.envs.ocean import OCEAN
+        names = list(OCEAN) if env_arg == "all" \
+            else [n.strip() for n in env_arg.split(",")]
+        bad = 0
+        for name in names:
+            report = check_selfplay_env(name, seed=seed)
+            print(report.summary())
+            bad += not report.ok
+        return 1 if bad else 0
     if host:
         from repro.bridge import wrap
         from repro.envs.ocean_host import OCEAN_HOST
@@ -689,9 +849,13 @@ def main(argv=None):
     ap.add_argument("--host", action="store_true",
                     help="run the host profile over the OCEAN_HOST mirror "
                          "registry (bridge-wrapped) instead of the JAX suite")
+    ap.add_argument("--selfplay", action="store_true",
+                    help="run the competitive-env (league) profile: "
+                         "zero-sum, role-swap symmetry, team done")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    return run_cli(args.env, seed=args.seed, host=args.host)
+    return run_cli(args.env, seed=args.seed, host=args.host,
+                   selfplay=args.selfplay)
 
 
 if __name__ == "__main__":

@@ -610,7 +610,94 @@ class Maze:
                                                           score)
 
 
+class Duel:
+    """Two-player zero-sum grid duel — the Policy League's native workload.
+
+    Both agents race on a g×g grid for a coin; the first to reach it takes
+    +1 from the other (simultaneous arrival is a wash) and the coin respawns
+    from the step key. A dense shaping term transfers reward for relative
+    progress toward the coin, so every step's reward vector sums to exactly
+    zero — the defining invariant of a competitive env, and what the
+    ``check_selfplay_env`` conformance profile asserts.
+
+    Roles are symmetric: ``swap_agents`` permutes the agent rows of the
+    state, and stepping the swapped state with swapped actions yields the
+    swapped outputs (obs/reward rows reversed, same done/coin). Score is
+    agent-0-centric: 0.5 + (caps₀ − caps₁) / 2·max(1, caps₀ + caps₁) ∈
+    [0, 1], so 0.5 is a tie and "winrate vs opponent" is score > 0.5."""
+
+    num_agents = 2
+    SHAPING = 0.05                   # zero-sum per-step progress transfer
+
+    def __init__(self, size: int = 5, horizon: int = 32):
+        self.size, self.horizon = size, horizon
+        self.observation_space = sp.Box((7,))  # [own ‖ opp ‖ coin ‖ t/H]
+        self.action_space = sp.Discrete(5)     # stay, N, S, W, E
+
+    def init(self, key):
+        k0, k1, kc = jax.random.split(key, 3)
+        g = self.size
+        pos = jnp.stack([jax.random.randint(k0, (2,), 0, g),
+                         jax.random.randint(k1, (2,), 0, g)])
+        return {"pos": pos.astype(jnp.int32),
+                "coin": jax.random.randint(kc, (2,), 0, g).astype(jnp.int32),
+                "caps": jnp.zeros((2,), jnp.int32),
+                "ret": jnp.zeros((2,), jnp.float32),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def reset(self, state, key):
+        s = self.init(key)
+        return s, self._obs(s)
+
+    def swap_agents(self, state):
+        """Agent-row permutation of the state — the role-swap symmetry the
+        selfplay conformance profile checks is ``step ∘ swap == swap ∘ step``
+        (with actions permuted too)."""
+        return {"pos": state["pos"][::-1], "coin": state["coin"],
+                "caps": state["caps"][::-1], "ret": state["ret"][::-1],
+                "t": state["t"]}
+
+    def _obs(self, s):
+        g = float(self.size - 1)
+        own = s["pos"].astype(jnp.float32) / g                    # (2, 2)
+        opp = own[::-1]
+        coin = jnp.broadcast_to(s["coin"].astype(jnp.float32) / g, (2, 2))
+        tt = jnp.full((2, 1), s["t"].astype(jnp.float32) / self.horizon)
+        return jnp.concatenate([own, opp, coin, tt], axis=-1)     # (2, 7)
+
+    def step(self, state, action, key):
+        g = self.size
+        moves = jnp.asarray([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]])
+        pos = jnp.clip(state["pos"] + moves[action], 0, g - 1)    # (2, 2)
+        # zero-sum shaping: transfer for relative progress toward the coin
+        d_prev = jnp.sum(jnp.abs(state["pos"] - state["coin"]), -1)
+        d_new = jnp.sum(jnp.abs(pos - state["coin"]), -1)
+        prog = (d_prev - d_new).astype(jnp.float32)               # (2,)
+        shaped0 = self.SHAPING * (prog[0] - prog[1])
+        # capture: sole arrival takes +1 from the other; both → wash
+        on = jnp.all(pos == state["coin"], -1)                    # (2,) bool
+        sole = on & ~on[::-1]
+        cap0 = sole[0].astype(jnp.float32) - sole[1].astype(jnp.float32)
+        r0 = shaped0 + cap0
+        reward = jnp.stack([r0, -r0])                             # sums to 0
+        caps = state["caps"] + sole.astype(jnp.int32)
+        coin = jnp.where(jnp.any(on),
+                         jax.random.randint(key, (2,), 0, g), state["coin"])
+        ret = state["ret"] + reward
+        t = state["t"] + 1
+        done = t >= self.horizon
+        total = jnp.maximum(1, caps[0] + caps[1]).astype(jnp.float32)
+        score = jnp.clip(
+            0.5 + (caps[0] - caps[1]).astype(jnp.float32) / (2.0 * total),
+            0.0, 1.0)
+        s2 = {"pos": pos, "coin": coin.astype(jnp.int32), "caps": caps,
+              "ret": ret, "t": t}
+        info = _end_info(done, ret[0], t, score)
+        return s2, self._obs(s2), reward, done, info
+
+
 OCEAN["pong"] = Pong
 OCEAN["drone"] = Drone
 OCEAN["tagteam"] = TagTeam
 OCEAN["maze"] = Maze
+OCEAN["duel"] = Duel

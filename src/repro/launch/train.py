@@ -29,6 +29,18 @@ def main():
                          "bridge.wrap on the host tier")
     ap.add_argument("--updates-per-launch", "-K", type=int, default=1,
                     help="fused updates per host dispatch (engine K)")
+    ap.add_argument("--selfplay", action="store_true",
+                    help="train --ocean env(s) under league self-play: "
+                         "frozen opponents sampled from the policy store "
+                         "in --league-dir (multi-agent envs only)")
+    ap.add_argument("--league-dir", default=None,
+                    help="policy-league directory (store + ratings); "
+                         "required with --selfplay")
+    ap.add_argument("--snapshot-every", type=int, default=10,
+                    help="selfplay: updates between store snapshots")
+    ap.add_argument("--strategy", default="prioritized",
+                    choices=("latest", "uniform", "prioritized"),
+                    help="selfplay opponent sampling strategy")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config for --arch")
@@ -95,25 +107,66 @@ def main():
                   f"steps={m['env_steps']} sps={m['sps']:.0f}")
         return
 
+    if args.conformance:
+        # --selfplay routes to the competitive-env (league) profile
+        from repro.envs.conformance import run_cli
+        raise SystemExit(run_cli(args.ocean, seed=args.seed,
+                                 selfplay=args.selfplay))
+
+    if args.selfplay:
+        # league self-play: frozen opponents from the --league-dir store
+        from repro.configs.ocean import ocean_tcfg, preset
+        from repro.envs.ocean import OCEAN
+        from repro.league import run_selfplay
+        if not args.ocean:
+            ap.error("--selfplay requires --ocean <name(s)> (e.g. duel)")
+        if not args.league_dir:
+            ap.error("--selfplay requires --league-dir")
+        names = [n.strip() for n in args.ocean.split(",")]
+        for name in names:
+            p = preset(name)
+            tcfg = ocean_tcfg(name, checkpoint_dir=args.ckpt_dir,
+                              engine_backend=args.engine_backend or "jit",
+                              updates_per_launch=args.updates_per_launch)
+            steps = args.total_env_steps or p.total_steps
+            ldir = os.path.join(args.league_dir, name) if len(names) > 1 \
+                else args.league_dir
+            print(f"=== selfplay/{name} (league={ldir}) ===")
+            res = run_selfplay(
+                OCEAN[name](), tcfg, league_dir=ldir, total_steps=steps,
+                snapshot_every=args.snapshot_every, hidden=p.hidden,
+                recurrent=p.recurrent, conv=p.conv, strategy=args.strategy,
+                seed=args.seed, backend=args.engine_backend or "jit",
+                log_every=10)
+            status = ("SOLVED" if res.winrate_random >= p.target_score
+                      else "unsolved")
+            print(f"  -> {status} winrate_vs_random="
+                  f"{res.winrate_random:.3f} versions={len(res.store)}")
+            print(res.ranker.leaderboard())
+        return
+
     if args.ocean:
         from repro.envs.ocean import OCEAN
         from repro.rl.trainer import Trainer
         from repro.configs.ocean import ocean_tcfg, preset
         names = list(OCEAN) if args.ocean == "all" \
             else [n.strip() for n in args.ocean.split(",")]
-        if args.conformance:
-            from repro.envs.conformance import run_cli
-            raise SystemExit(run_cli(args.ocean, seed=args.seed))
         for name in names:
             p = preset(name)
             tcfg = ocean_tcfg(name, checkpoint_dir=args.ckpt_dir,
                               engine_backend=args.engine_backend or "jit",
-                              updates_per_launch=args.updates_per_launch)
+                              updates_per_launch=args.updates_per_launch,
+                              checkpoint_every=args.save_every)
             tr = Trainer(OCEAN[name](), tcfg, hidden=p.hidden,
                          recurrent=p.recurrent, conv=p.conv, seed=args.seed)
             steps = args.total_env_steps or p.total_steps
             print(f"=== {name} (recurrent={p.recurrent}) ===")
-            m = tr.train(steps, log_every=10, target_score=p.target_score)
+            m = tr.train(steps, log_every=10, target_score=p.target_score,
+                         checkpoint_dir=os.path.join(args.ckpt_dir, name),
+                         resume=args.resume)
+            if not m:
+                print("  -> resumed past the step budget; nothing to do")
+                continue
             status = "SOLVED" if m["score"] >= p.target_score else "unsolved"
             print(f"  -> {status} score={m['score']:.3f} "
                   f"steps={m['env_steps']} sps={m['sps']:.0f}")

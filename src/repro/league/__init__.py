@@ -1,0 +1,23 @@
+"""Policy League: versioned policy store, rating-ranked opponent pool, and
+device-resident self-play arena (see README §Policy League).
+
+    store.PolicyStore      — versioned frozen-policy archive over ckpt
+    ranker.Ranker          — Elo over match records + opponent samplers
+    arena.Arena            — vmapped round-robin match evaluation
+    selfplay               — TrainEngine integration + run_selfplay driver
+
+CLI: ``python -m repro.league arena --league-dir DIR --env duel``.
+"""
+from repro.league.arena import Arena
+from repro.league.ranker import OpponentSampler, Ranker, SAMPLER_STRATEGIES
+from repro.league.selfplay import (LeagueResult, SelfPlay, SelfPlayCarry,
+                                   build_league, make_selfplay_update,
+                                   run_selfplay, selfplay_rollout)
+from repro.league.store import INITIAL_RATING, PolicyStore
+
+__all__ = [
+    "Arena", "INITIAL_RATING", "LeagueResult", "OpponentSampler",
+    "PolicyStore", "Ranker", "SAMPLER_STRATEGIES", "SelfPlay",
+    "SelfPlayCarry", "build_league", "make_selfplay_update", "run_selfplay",
+    "selfplay_rollout",
+]

@@ -1,0 +1,166 @@
+"""Device-resident evaluation arena — round-robin matches as one XLA program.
+
+A match is a T-step autoreset rollout of N envs where agent rows [0, L) act
+under side A's params and rows [L, A) under side B's, counting completed
+episodes as wins/draws/losses from the env's side-A-centric ``score``
+(> 0.5 ⇒ A won — the ``check_selfplay_env`` score convention). The match is
+a pure function of ``(params_a, params_b, key)``, so a K-opponent pool
+evaluates as ONE vmapped/jitted launch over stacked param sets — no
+per-match Python dispatch — and an all-pairs round-robin is a single
+vmapped call over the gathered pair axes. ``benchmarks/bench_league.py``
+holds the vmapped-vs-sequential speedup this buys.
+
+Match records ``(a, b, outcome)`` feed ``ranker.Ranker`` directly;
+``outcome`` is the standard match score (wins + draws/2) / episodes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.emulation import Emulated
+from repro.core.vector import VecEnv
+
+_EPS = 1e-6                           # score == 0.5 within eps ⇒ draw
+
+
+class Arena:
+    """Evaluation arena for one competitive env + policy architecture.
+
+    ``env`` is a raw Ocean-protocol env (wrapped in ``Emulated`` here) or an
+    already-wrapped one; ``policy``/``dist`` must match the stored params
+    (both sides share the learner's architecture). ``learner_agents`` is the
+    agent-row split L (default A // 2). A ``random`` side samples from
+    zero logits — uniform over discrete actions, a unit Gaussian for
+    continuous ones — the league's fixed skill floor."""
+
+    def __init__(self, env, policy, dist, *, num_envs: int = 16,
+                 steps: Optional[int] = None, learner_agents: int = 0):
+        self.em = env if isinstance(env, Emulated) else Emulated(env)
+        self.policy, self.dist = policy, dist
+        A = self.em.num_agents
+        if A < 2:
+            raise ValueError(f"arena needs a multi-agent env "
+                             f"(num_agents={A}); matches split agent rows "
+                             f"between two param sets")
+        self.A = A
+        self.L = learner_agents or A // 2
+        if not 0 < self.L < A:
+            raise ValueError(f"learner_agents={self.L} must split "
+                             f"num_agents={A} into two non-empty sides")
+        self.vec = VecEnv(self.em, num_envs)
+        self.N = num_envs
+        h = int(getattr(self.em.env, "horizon", 32))
+        self.steps = steps or 2 * h
+        self._play = jax.jit(self._make_play(random_b=False))
+        self._play_random = jax.jit(self._make_play(random_b=True))
+        self._vs_pool = jax.jit(jax.vmap(self._make_play(random_b=False),
+                                         in_axes=(None, 0, 0)))
+        self._pairs = jax.jit(jax.vmap(self._make_play(random_b=False),
+                                       in_axes=(0, 0, 0)))
+
+    # -- the single-match program ---------------------------------------------
+    def _make_play(self, random_b: bool):
+        policy, dist, vec = self.policy, self.dist, self.vec
+        N, A, L, T = self.N, self.A, self.L, self.steps
+        step_fn = vec.step_fn()
+
+        def split_rows(x, lo, hi):
+            e = x.reshape((N, A) + x.shape[1:])[:, lo:hi]
+            return e.reshape((N * (hi - lo),) + x.shape[1:])
+
+        def act(params, obs, carry, reset, key, random):
+            logits, _, pc = policy.step(params, obs, carry, reset=reset)
+            if random:
+                logits = jnp.zeros_like(logits)
+            return dist.sample(key, logits), pc
+
+        def play(params_a, params_b, key):
+            k_init, key = jax.random.split(key)
+            env_state, obs = vec.init(k_init)
+            ca = policy.initial_carry(N * L)
+            cb = policy.initial_carry(N * (A - L))
+            zero = jnp.zeros((), jnp.float32)
+            carry0 = (env_state, obs, ca, cb,
+                      jnp.zeros((N * A,), jnp.bool_), zero, zero, zero)
+
+            def one(c, k):
+                env_state, obs, ca, cb, done_prev, wa, wb, dr = c
+                ka, kb, ke = jax.random.split(k, 3)
+                d_e = done_prev.reshape(N, A)
+                act_a, ca = act(params_a, split_rows(obs, 0, L), ca,
+                                d_e[:, :L].reshape(-1), ka, False)
+                act_b, cb = act(params_b, split_rows(obs, L, A), cb,
+                                d_e[:, L:].reshape(-1), kb, random_b)
+                action = jnp.concatenate(
+                    [act_a.reshape((N, L) + act_a.shape[1:]),
+                     act_b.reshape((N, A - L) + act_b.shape[1:])],
+                    axis=1).reshape((N * A,) + act_a.shape[1:])
+                env_state, obs, _rew, done, info = step_fn(env_state, action,
+                                                           ke)
+                v = info["valid"].astype(jnp.float32)
+                s = info["score"]
+                wa = wa + jnp.sum(v * (s > 0.5 + _EPS))
+                wb = wb + jnp.sum(v * (s < 0.5 - _EPS))
+                dr = dr + jnp.sum(v * (jnp.abs(s - 0.5) <= _EPS))
+                return (env_state, obs, ca, cb, done, wa, wb, dr), None
+
+            (_, _, _, _, _, wa, wb, dr), _ = jax.lax.scan(
+                one, carry0, jax.random.split(key, T))
+            ep = wa + wb + dr
+            return {"wins_a": wa, "wins_b": wb, "draws": dr, "episodes": ep,
+                    "outcome": (wa + 0.5 * dr) / jnp.maximum(ep, 1.0)}
+
+        return play
+
+    # -- public API ------------------------------------------------------------
+    def play(self, params_a, params_b, key) -> dict:
+        """One match; returns host floats."""
+        return {k: float(v) for k, v in
+                self._play(params_a, params_b, key).items()}
+
+    def play_random(self, params_a, key) -> dict:
+        """Side A vs the random-policy baseline (zero logits)."""
+        return {k: float(v) for k, v in
+                self._play_random(params_a, params_a, key).items()}
+
+    def vs_pool(self, params_a, stacked_b, key) -> list:
+        """Side A vs a K-stacked opponent pool in one vmapped launch;
+        returns K per-opponent result dicts."""
+        K = jax.tree.leaves(stacked_b)[0].shape[0]
+        out = self._vs_pool(params_a, stacked_b, jax.random.split(key, K))
+        rows = jax.device_get(out)
+        return [{k: float(rows[k][i]) for k in rows} for i in range(K)]
+
+    def round_robin(self, stacked, versions, key) -> list:
+        """All ordered pairs i < j of a K-stacked param set as ONE vmapped
+        launch. Returns ``(versions[i], versions[j], outcome_ij)`` match
+        records ready for ``Ranker.record``."""
+        K = jax.tree.leaves(stacked)[0].shape[0]
+        if K != len(versions):
+            raise ValueError(f"stacked leading axis {K} != "
+                             f"len(versions) {len(versions)}")
+        ii, jj = np.triu_indices(K, k=1)
+        if len(ii) == 0:
+            return []
+        side_a = jax.tree.map(lambda x: jnp.asarray(x)[ii], stacked)
+        side_b = jax.tree.map(lambda x: jnp.asarray(x)[jj], stacked)
+        out = self._pairs(side_a, side_b, jax.random.split(key, len(ii)))
+        outcomes = np.asarray(jax.device_get(out["outcome"]))
+        return [(versions[i], versions[j], float(o))
+                for i, j, o in zip(ii, jj, outcomes)]
+
+    def vs_pool_sequential(self, params_a, stacked_b, key) -> list:
+        """Per-opponent jitted dispatches — the baseline the vmapped pool is
+        benchmarked against (bench_league.py); identical math, K launches."""
+        K = jax.tree.leaves(stacked_b)[0].shape[0]
+        keys = jax.random.split(key, K)
+        out = []
+        for i in range(K):
+            one = jax.tree.map(lambda x: jnp.asarray(x)[i], stacked_b)
+            out.append({k: float(v) for k, v in
+                        self._play(params_a, one, keys[i]).items()})
+        return out

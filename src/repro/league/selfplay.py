@@ -1,0 +1,229 @@
+"""Self-play training — the league's engine integration (layer 4).
+
+A multi-agent env's agent rows split into *learner* rows [0, L) acting
+under the live ``TrainState`` params and *opponent* rows [L, A) acting
+under frozen params sampled from the ``PolicyStore`` once per engine
+launch. The rollout records only learner rows — opponent behavior is part
+of the environment from the learner's perspective — and feeds the exact
+same ``make_ocean_learn`` PPO math as ordinary training, so self-play
+works wherever the fused launch does (jit and shard_map tiers; randomness
+stays keyed by global row index, so an S-device run is seed-matched with
+single-device).
+
+``run_selfplay`` is the batteries-included driver behind
+``launch.train --selfplay`` and the Duel acceptance test: snapshot the
+learner into the store on a cadence, rate each snapshot against the pool in
+the vmapped arena, and sample opponents by rating.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.rl.learner import _shard_index, make_ocean_learn
+from repro.rl.rollout import Trajectory
+
+
+class SelfPlayCarry(NamedTuple):
+    """RolloutCarry with a second policy carry for the frozen opponent rows
+    (recurrent opponents replay their snapshot's architecture)."""
+    env_state: object
+    obs: jax.Array              # (N*A, obs) — all rows, agent-major
+    policy_carry: object        # learner rows (N*L)
+    opp_carry: object           # opponent rows (N*(A-L))
+    done_prev: jax.Array        # (N*A,)
+
+
+@dataclasses.dataclass
+class SelfPlay:
+    """Engine-facing self-play spec: ``next_opponent()`` is called host-side
+    once per launch (an ``OpponentSampler.next_params``, or any callable
+    returning a param tree); ``learner_agents`` is the agent-row split L
+    (0 → num_agents // 2)."""
+    next_opponent: Callable[[], object]
+    learner_agents: int = 0
+
+
+def selfplay_rollout(policy, params, opp_params, step_fn, carry, key,
+                     unroll, dist, num_envs, env_offset, num_agents,
+                     learner_agents):
+    """T-step fused rollout with split agent rows. Returns
+    ``(carry', Trajectory-over-learner-rows, last_value (N*L,))``.
+
+    Randomness is keyed by global row index (learner and opponent streams
+    fold separate subkeys), and env keys by global env index — the same
+    shard-invariance contract as ``rollout.rollout(keyed=...)``, so the
+    shard_map tier passes ``env_offset = shard * local_envs``."""
+    N, A, L = num_envs, num_agents, learner_agents
+    O = A - L
+
+    def rows(x, lo, hi):
+        e = x.reshape((N, A) + x.shape[1:])[:, lo:hi]
+        return e.reshape((N * (hi - lo),) + x.shape[1:])
+
+    def one(c: SelfPlayCarry, k):
+        k_act, k_opp, k_env = jax.random.split(k, 3)
+        d_e = c.done_prev
+        obs_l, obs_o = rows(c.obs, 0, L), rows(c.obs, L, A)
+        reset_l, reset_o = rows(d_e, 0, L), rows(d_e, L, A)
+        logits_l, value_l, pc_l = policy.step(params, obs_l, c.policy_carry,
+                                              reset=reset_l)
+        logits_o, _, pc_o = policy.step(opp_params, obs_o, c.opp_carry,
+                                        reset=reset_o)
+        # per-row keys from GLOBAL row indices (shard-invariant)
+        kl = jax.vmap(lambda i: jax.random.fold_in(k_act, i))(
+            env_offset * L + jnp.arange(N * L))
+        ko = jax.vmap(lambda i: jax.random.fold_in(k_opp, i))(
+            env_offset * O + jnp.arange(N * O))
+        act_l = jax.vmap(dist.sample)(kl, logits_l)
+        act_o = jax.vmap(dist.sample)(ko, logits_o)
+        logp_l = dist.log_prob(logits_l, act_l)
+        action = jnp.concatenate(
+            [act_l.reshape((N, L) + act_l.shape[1:]),
+             act_o.reshape((N, O) + act_o.shape[1:])],
+            axis=1).reshape((N * A,) + act_l.shape[1:])
+        env_keys = jax.vmap(lambda i: jax.random.fold_in(k_env, i))(
+            env_offset + jnp.arange(N))
+        env_state, obs, rew, done, info = step_fn(c.env_state, action,
+                                                  env_keys)
+        out = Trajectory(obs_l, act_l, logp_l, value_l, rows(rew, 0, L),
+                         rows(done, 0, L), reset_l, info)
+        return SelfPlayCarry(env_state, obs, pc_l, pc_o, done), out
+
+    keys = jax.random.split(key, unroll)
+    carry, traj = jax.lax.scan(one, carry, keys)
+    _, last_value, _ = policy.step(params, rows(carry.obs, 0, L),
+                                   carry.policy_carry,
+                                   reset=rows(carry.done_prev, 0, L))
+    return carry, traj, last_value
+
+
+def make_selfplay_update(policy, step_fn, tcfg: TrainConfig, dist,
+                         num_envs: int, num_agents: int, learner_agents: int,
+                         kernel_mode: str = None, axis_name=None,
+                         num_shards: int = 1):
+    """Returns jit-able ``update(ts, rc, opp_params, key)`` — the self-play
+    twin of ``learner.make_ocean_update``: split-row rollout, then the
+    shared PPO learn over the learner rows only."""
+    T = tcfg.unroll_length
+    learn = make_ocean_learn(policy, tcfg, dist, kernel_mode=kernel_mode,
+                             axis_name=axis_name, num_shards=num_shards)
+
+    def update(ts, rc: SelfPlayCarry, opp_params, key):
+        k_roll, k_perm = jax.random.split(key)
+        carry0 = rc.policy_carry
+        off = (_shard_index(axis_name) * num_envs
+               if axis_name is not None else jnp.zeros((), jnp.int32))
+        rc, traj, last_value = selfplay_rollout(
+            policy, ts.params, opp_params, step_fn, rc, k_roll, T, dist,
+            num_envs, off, num_agents, learner_agents)
+        ts, metrics = learn(ts, carry0, traj, last_value, k_perm)
+        return ts, rc, metrics
+
+    return update
+
+
+# -- high-level driver --------------------------------------------------------
+
+def build_league(env, tcfg: TrainConfig, *, league_dir: str,
+                 hidden: int = 64, recurrent: bool = False,
+                 conv: bool = None, strategy: str = "prioritized",
+                 seed: int = 0, learner_agents: int = 0,
+                 arena_envs: int = 16, backend: str = None, mesh=None,
+                 kernel_mode: str = None):
+    """Wire a complete league around ``env``: (engine, store, ranker,
+    sampler, arena). The store is seeded with the engine's init params as
+    version 0 if empty, so sampling always has an opponent."""
+    from repro.rl.engine import TrainEngine
+    from repro.rl.trainer import ocean_policy_stack
+    from repro.league.arena import Arena
+    from repro.league.ranker import OpponentSampler, Ranker
+    from repro.league.store import PolicyStore
+
+    em, dist, policy = ocean_policy_stack(env, hidden=hidden,
+                                          recurrent=recurrent, conv=conv)
+    store = PolicyStore(league_dir)
+    ranker = Ranker(store.ratings())
+    sampler = OpponentSampler(store, ranker, policy.abstract(),
+                              strategy=strategy, seed=seed)
+    engine = TrainEngine(
+        em, policy, tcfg, dist, key=jax.random.PRNGKey(seed),
+        backend=backend, mesh=mesh, kernel_mode=kernel_mode,
+        selfplay=SelfPlay(sampler.next_params, learner_agents))
+    if len(store) == 0:
+        store.add(jax.device_get(engine.ts.params), step=0)
+    arena = Arena(em, policy, dist, num_envs=arena_envs,
+                  learner_agents=learner_agents or em.num_agents // 2)
+    return engine, store, ranker, sampler, arena
+
+
+class LeagueResult(NamedTuple):
+    history: list               # per-update metric dicts (engine history)
+    store: object               # the PolicyStore (latest version = final)
+    ranker: object              # Ranker with post-run ratings
+    winrate_random: float       # final params vs the random baseline
+
+
+def run_selfplay(env, tcfg: TrainConfig, *, league_dir: str,
+                 total_steps: int, snapshot_every: int = 10,
+                 rate_matches: int = 4, hidden: int = 64,
+                 recurrent: bool = False, conv: bool = None,
+                 strategy: str = "prioritized",
+                 seed: int = 0, learner_agents: int = 0,
+                 backend: str = None, mesh=None, kernel_mode: str = None,
+                 log_every: int = 0) -> LeagueResult:
+    """Self-play training loop: every ``snapshot_every`` updates the learner
+    is snapshotted into the store, rated against up to ``rate_matches``
+    pool members in one vmapped arena launch, and the ratings persist to
+    ``league_dir/league.json``. The returned ``winrate_random`` is the
+    final learner's match outcome vs the random-policy skill floor — the
+    league's solved criterion (self-play score hovers near 0.5 by
+    construction, so score can't be one)."""
+    engine, store, ranker, sampler, arena = build_league(
+        env, tcfg, league_dir=league_dir, hidden=hidden, recurrent=recurrent,
+        conv=conv, strategy=strategy, seed=seed,
+        learner_agents=learner_agents, backend=backend, mesh=mesh,
+        kernel_mode=kernel_mode)
+    rate_key = jax.random.PRNGKey(seed + 1)
+    last = {"score": None}
+
+    def on_update(u, m):
+        last["score"] = m["score"]
+        if log_every and (u % log_every == 0):
+            print(f"  upd {u:4d} steps {m['env_steps']:7d} "
+                  f"score {m['score']:.3f} opp v{sampler.history[-1]} "
+                  f"sps {m['sps']:.0f}")
+
+    snap = {"through": 0}
+
+    def on_launch(u):
+        nonlocal rate_key
+        if u // snapshot_every <= snap["through"] // snapshot_every:
+            return
+        snap["through"] = u
+        params = jax.device_get(engine.ts.params)
+        v = store.add(params, step=u * engine.steps_per_update,
+                      score=last["score"])
+        pool = [x for x in store.versions() if x != v][-rate_matches:]
+        if pool:
+            stacked = store.load_stacked(pool, sampler.like)
+            rate_key, sub = jax.random.split(rate_key)
+            for opp, res in zip(pool, arena.vs_pool(params, stacked, sub)):
+                ranker.update(v, opp, res["outcome"])
+            store.set_ratings(ranker.ratings)
+
+    history, solved = engine.run(total_steps, on_update=on_update,
+                                 on_launch=on_launch)
+    final = jax.device_get(engine.ts.params)
+    if snap["through"] != len(history):    # last launch wasn't snapshotted
+        store.add(final, step=len(history) * engine.steps_per_update,
+                  score=last["score"])
+    for v in store.versions():          # unrated versions get the default
+        ranker.ratings.setdefault(v, ranker.rating(v))
+    store.set_ratings(ranker.ratings)
+    wr = arena.play_random(final, jax.random.PRNGKey(seed + 2))["outcome"]
+    return LeagueResult(history, store, ranker, wr)

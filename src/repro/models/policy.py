@@ -102,6 +102,11 @@ class OceanPolicy:
     def init(self, key, dtype=jnp.float32):
         return init_params(self.spec(), key, dtype)
 
+    def abstract(self, dtype=jnp.float32):
+        """ShapeDtypeStruct tree of the params — the ``like`` template for
+        checkpoint/PolicyStore restores (no allocation, any mesh)."""
+        return abstract_params(self.spec(), dtype)
+
     def initial_carry(self, batch: int):
         if not self.recurrent:
             return None

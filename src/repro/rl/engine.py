@@ -33,8 +33,20 @@ Four execution tiers behind one ``run(total_steps)`` API:
                     carries stay per-env correct even though every batch is
                     a different first-finisher subset.
 
-Checkpointing, ``target_score`` early-exit, and metric logging are host
-callbacks that fire at launch boundaries.
+Checkpointing, ``target_score`` early-exit, and metric logging fire at
+launch boundaries: with ``checkpoint_dir`` set, every
+``tcfg.checkpoint_every`` updates the full resumable state (TrainState +
+RNG key + rollout carry where device-resident) saves asynchronously at the
+``on_launch`` hook point, and ``restore()`` resumes a run so that
+interrupted-then-resumed is bitwise-identical to uninterrupted (jit and
+shard_map tiers; the pool/host tiers resume the learner but re-seed their
+host-side env state).
+
+Self-play (league/): construct with ``selfplay=SelfPlay(next_opponent, L)``
+on a multi-agent env and agent rows [0, L) train while rows [L, A) act
+under frozen params that ``next_opponent()`` samples from the PolicyStore
+once per launch — jit and shard_map tiers only, since the opponent swap is
+a host decision at the launch boundary.
 """
 from __future__ import annotations
 
@@ -48,6 +60,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.checkpoint import ckpt
 from repro.configs.base import TrainConfig
 from repro.core.vector import VecEnv
 from repro.distributed import sharding as shd
@@ -69,9 +82,22 @@ def unpack_metrics(row) -> dict:
     return {k: float(v) for k, v in zip(METRIC_KEYS, row)}
 
 
-def _scan_launch(update, k: int):
+def _scan_launch(update, k: int, selfplay: bool = False):
     """K sequential updates as one traced program; returns the (K, n_metrics)
-    metrics ring alongside the threaded state."""
+    metrics ring alongside the threaded state. In selfplay mode the launch
+    carries the frozen opponent params as an extra (non-donated) operand —
+    all K fused updates face the same opponent; the swap is per launch."""
+    if selfplay:
+        def launch(ts: TrainState, rc, opp, key):
+            def body(carry, uk):
+                ts, rc = carry
+                ts, rc, m = update(ts, rc, opp, uk)
+                return (ts, rc), pack_metrics(m)
+            (ts, rc), ring = jax.lax.scan(body, (ts, rc),
+                                          jax.random.split(key, k))
+            return ts, rc, ring
+        return launch
+
     def launch(ts: TrainState, rc: RolloutCarry, key):
         def body(carry, uk):
             ts, rc = carry
@@ -98,7 +124,8 @@ class TrainEngine:
     def __init__(self, env, policy, tcfg: TrainConfig, dist, *, key,
                  backend: str = None, updates_per_launch: int = None,
                  mesh: Optional[Mesh] = None, kernel_mode: str = None,
-                 num_shards: int = 1):
+                 num_shards: int = 1, selfplay=None,
+                 checkpoint_dir: Optional[str] = None):
         self.env, self.policy, self.tcfg, self.dist = env, policy, tcfg, dist
         self.backend = backend or tcfg.engine_backend
         self.K = updates_per_launch or tcfg.updates_per_launch
@@ -110,12 +137,33 @@ class TrainEngine:
         self.key = key
         self.mesh = mesh
         self._launches = {}
+        self.selfplay = selfplay
+        self.checkpoint_dir = checkpoint_dir
+        self._ckpt_thread = None
+        self._resume_update = 0
+        self._saved_upto = 0
 
         self.ts = init_train_state(policy.init(jax.random.fold_in(key, 0)))
 
         if self.backend != "shard_map" and mesh is not None:
             raise ValueError(f"mesh is only meaningful for the shard_map "
                              f"tier, not backend={self.backend!r}")
+        if selfplay is not None:
+            if self.backend not in ("jit", "shard_map"):
+                raise ValueError(
+                    f"selfplay runs on the jit and shard_map tiers (the "
+                    f"opponent swap is a launch-boundary decision), not "
+                    f"backend={self.backend!r}")
+            A = getattr(env, "num_agents", 1)
+            if A < 2:
+                raise ValueError(
+                    f"selfplay needs a multi-agent env to split rows "
+                    f"between learner and opponent; num_agents={A}")
+            self._sp_agents = selfplay.learner_agents or A // 2
+            if not 0 < self._sp_agents < A:
+                raise ValueError(
+                    f"learner_agents={self._sp_agents} must split "
+                    f"num_agents={A} into two non-empty sides")
         if self.backend == "host":
             if self.K != 1:
                 raise ValueError(
@@ -161,8 +209,16 @@ class TrainEngine:
         self.vec = VecEnv(env, tcfg.num_envs)
         env_state, obs = self.vec.init(jax.random.fold_in(key, 1))
         B = self.vec.batch_size
-        self.rc = RolloutCarry(env_state, obs, policy.initial_carry(B),
-                               jnp.zeros((B,), jnp.bool_))
+        if self.selfplay is not None:
+            from repro.league.selfplay import SelfPlayCarry
+            N, A, L = tcfg.num_envs, self.vec.num_agents, self._sp_agents
+            self.rc = SelfPlayCarry(env_state, obs,
+                                    policy.initial_carry(N * L),
+                                    policy.initial_carry(N * (A - L)),
+                                    jnp.zeros((B,), jnp.bool_))
+        else:
+            self.rc = RolloutCarry(env_state, obs, policy.initial_carry(B),
+                                   jnp.zeros((B,), jnp.bool_))
 
         if self.backend == "shard_map":
             if num_shards != 1:
@@ -184,10 +240,9 @@ class TrainEngine:
             self._axis = axes if len(axes) > 1 else axes[0]
             self._rc_spec = shd.ocean_batch_spec(self.mesh)
             self.num_shards = S
-            self._update = make_ocean_update(
-                policy, self.vec.step_keyed_fn(), tcfg, dist,
-                self.vec.num_envs // S, kernel_mode=kernel_mode,
-                axis_name=self._axis, num_shards=S, keyed_step=True)
+            self._update = self._make_update(
+                self.vec.num_envs // S, kernel_mode,
+                axis_name=self._axis, num_shards=S)
             # place state once: params/opt replicated, env batch sharded
             self.ts = jax.device_put(self.ts,
                                      NamedSharding(self.mesh, P()))
@@ -200,10 +255,24 @@ class TrainEngine:
                     f"num_shards={num_shards}: the S-block emulation would "
                     f"silently drop the tail envs from every minibatch")
             self.num_shards = num_shards
-            self._update = make_ocean_update(
-                policy, self.vec.step_keyed_fn(), tcfg, dist,
-                self.vec.num_envs, kernel_mode=kernel_mode,
-                num_shards=num_shards, keyed_step=True)
+            self._update = self._make_update(self.vec.num_envs, kernel_mode,
+                                             num_shards=num_shards)
+
+    def _make_update(self, num_envs_local: int, kernel_mode,
+                     axis_name=None, num_shards: int = 1):
+        """The per-update program of the fused tiers: the ordinary keyed-step
+        Ocean update, or its self-play twin with split agent rows."""
+        if self.selfplay is not None:
+            from repro.league.selfplay import make_selfplay_update
+            return make_selfplay_update(
+                self.policy, self.vec.step_keyed_fn(), self.tcfg, self.dist,
+                num_envs_local, self.vec.num_agents, self._sp_agents,
+                kernel_mode=kernel_mode, axis_name=axis_name,
+                num_shards=num_shards)
+        return make_ocean_update(
+            self.policy, self.vec.step_keyed_fn(), self.tcfg, self.dist,
+            num_envs_local, kernel_mode=kernel_mode, axis_name=axis_name,
+            num_shards=num_shards, keyed_step=True)
 
     # -- program cache ---------------------------------------------------------
     def _launch_for(self, k: int):
@@ -211,10 +280,12 @@ class TrainEngine:
         K and the tail). State buffers are donated: the launch consumes its
         inputs and the engine only ever holds the newest generation."""
         if k not in self._launches:
-            fn = _scan_launch(self._update, k)
+            sp = self.selfplay is not None
+            fn = _scan_launch(self._update, k, selfplay=sp)
             if self.backend == "shard_map":
-                fn = shard_map(fn, mesh=self.mesh,
-                               in_specs=(P(), self._rc_spec, P()),
+                in_specs = ((P(), self._rc_spec, P(), P()) if sp
+                            else (P(), self._rc_spec, P()))
+                fn = shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                out_specs=(P(), self._rc_spec, P()),
                                check_rep=False)
             self._launches[k] = jax.jit(fn, donate_argnums=(0, 1))
@@ -225,11 +296,78 @@ class TrainEngine:
         fused-vs-sequential parity test can replay the exact schedule."""
         return jax.random.split(key, k or self.K)
 
-    # -- state management (checkpoint restore) ---------------------------------
+    # -- state management (checkpoint save/restore) ----------------------------
     def set_train_state(self, ts: TrainState):
         if self.backend == "shard_map":
             ts = jax.device_put(ts, NamedSharding(self.mesh, P()))
         self.ts = ts
+
+    def _ckpt_like(self):
+        sds = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        like = {"ts": sds(self.ts), "key": sds(self.key),
+                "update": jax.ShapeDtypeStruct((), np.int64)}
+        if self.rc is not None:
+            like["rc"] = sds(self.rc)
+        return like
+
+    def save_checkpoint(self, update: int = None, async_: bool = False):
+        """Save the full resumable state (TrainState, RNG key, update count,
+        and — on the device-resident tiers — the rollout carry) as one
+        elastic checkpoint under ``checkpoint_dir``. Async mode snapshots to
+        host synchronously and writes on a background thread; overlapping
+        saves are serialized (the previous write joins first)."""
+        if self.checkpoint_dir is None:
+            raise ValueError("engine has no checkpoint_dir")
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+            self._ckpt_thread = None
+        update = self._saved_upto if update is None else update
+        tree = {"ts": self.ts, "key": self.key,
+                "update": np.asarray(update, np.int64)}
+        if self.rc is not None:
+            tree["rc"] = self.rc
+        out = ckpt.save(self.checkpoint_dir, tree, step=update,
+                        async_=async_, keep=self.tcfg.keep_checkpoints)
+        if async_:
+            self._ckpt_thread = out
+        return out
+
+    def restore(self, directory: Optional[str] = None) -> int:
+        """Restore the newest committed checkpoint and return the update
+        count it was taken at; ``run`` then continues from there. On the jit
+        and shard_map tiers the rollout carry restores too, so an
+        interrupted-then-resumed run is bitwise-identical to an
+        uninterrupted one; pool/host resume the learner + key only (their
+        env state lives host-side)."""
+        directory = directory or self.checkpoint_dir
+        if directory is None:
+            raise ValueError("engine has no checkpoint_dir to restore from")
+        tree = ckpt.restore(directory, self._ckpt_like())
+        self.set_train_state(tree["ts"])
+        if self.rc is not None:
+            rc = tree["rc"]
+            if self.backend == "shard_map":
+                rc = jax.device_put(rc,
+                                    NamedSharding(self.mesh, self._rc_spec))
+            self.rc = rc
+        self.key = tree["key"]
+        self._resume_update = self._saved_upto = int(tree["update"])
+        return self._resume_update
+
+    def _maybe_checkpoint(self, updates_done: int):
+        """The launch-boundary checkpoint hook (all four tiers)."""
+        ce = self.tcfg.checkpoint_every
+        if self.checkpoint_dir is None or ce <= 0:
+            return
+        if updates_done // ce > self._saved_upto // ce:
+            self._saved_upto = updates_done
+            self.save_checkpoint(updates_done, async_=True)
+
+    def _join_checkpoint(self):
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+            self._ckpt_thread = None
 
     @property
     def batch_size(self) -> int:
@@ -265,6 +403,8 @@ class TrainEngine:
         num_updates = max(1, total_steps // spu)
         history, pending, solved = [], deque(), None
         t0 = time.perf_counter()
+        done_before = self._resume_update * spu    # resumed runs: sps counts
+                                                   # only this process's work
 
         def drain_one():
             nonlocal solved
@@ -274,7 +414,7 @@ class TrainEngine:
             for i in range(kk):
                 md = unpack_metrics(rows[i])
                 md["env_steps"] = (u0 + i + 1) * spu
-                md["sps"] = md["env_steps"] / elapsed
+                md["sps"] = (md["env_steps"] - done_before) / elapsed
                 history.append(md)
                 if on_update is not None:
                     on_update(u0 + i, md)
@@ -283,14 +423,20 @@ class TrainEngine:
                         and md["score"] >= target_score):
                     solved = md
 
-        u = 0
+        u = self._resume_update
         while u < num_updates:
             k = min(self.K, num_updates - u)
             self.key, sub = jax.random.split(self.key)
-            self.ts, self.rc, ring = self._launch_for(k)(self.ts, self.rc,
-                                                         sub)
+            if self.selfplay is not None:
+                opp = self.selfplay.next_opponent()
+                self.ts, self.rc, ring = self._launch_for(k)(
+                    self.ts, self.rc, opp, sub)
+            else:
+                self.ts, self.rc, ring = self._launch_for(k)(self.ts,
+                                                             self.rc, sub)
             pending.append((u, k, ring))
             u += k
+            self._maybe_checkpoint(u)
             if on_launch is not None:
                 on_launch(u)
             if target_score is not None:
@@ -302,6 +448,7 @@ class TrainEngine:
                 drain_one()
         while pending:
             drain_one()
+        self._join_checkpoint()
         return history, solved
 
     # -- pool tier -------------------------------------------------------------
@@ -329,13 +476,15 @@ class TrainEngine:
         only on that update's learn, not on later dispatched work), stamp
         env_steps/sps, fire ``on_update``, and latch the solving update into
         ``st["solved"]``."""
+        done_before = self._resume_update * spu
         def drain_one():
             uu, m = pending.popleft()
             md = {k: float(v) for k, v in
                   zip(METRIC_KEYS, jax.device_get([m[k] for k in
                                                    METRIC_KEYS]))}
             md["env_steps"] = (uu + 1) * spu
-            md["sps"] = md["env_steps"] / (time.perf_counter() - t0)
+            md["sps"] = ((md["env_steps"] - done_before)
+                         / (time.perf_counter() - t0))
             history.append(md)
             if on_update is not None:
                 on_update(uu, md)
@@ -364,7 +513,7 @@ class TrainEngine:
         drain_one = self._metrics_drainer(pending, history, spu, t0,
                                           on_update, target_score, st)
 
-        u = 0
+        u = self._resume_update
         while u < num_updates and st["solved"] is None:
             obs, rew, done, info, b = pool.recv()
             if recs[b]:
@@ -386,6 +535,7 @@ class TrainEngine:
                 recs[b] = []
                 pending.append((u, m))
                 u += 1
+                self._maybe_checkpoint(u)
                 if on_launch is not None:
                     on_launch(u)
                 # sync each update only when early-exit needs the score;
@@ -406,6 +556,7 @@ class TrainEngine:
             pool.send(action, b)
         while pending:
             drain_one()
+        self._join_checkpoint()
         return history, st["solved"]
 
     # -- host tier -------------------------------------------------------------
@@ -441,7 +592,7 @@ class TrainEngine:
         drain_one = self._metrics_drainer(pending, history, spu, t0,
                                           on_update, target_score, st)
 
-        u = 0
+        u = self._resume_update
         while u < num_updates and st["solved"] is None:
             obs, rew, done, info, ids = hv.recv(
                 timeout=tcfg.host_recv_timeout)
@@ -487,6 +638,7 @@ class TrainEngine:
                 self.ts, m = self._learn(self.ts, c0, traj, last_value, kp)
                 pending.append((u, m))
                 u += 1
+                self._maybe_checkpoint(u)
                 if on_launch is not None:
                     on_launch(u)
                 if target_score is not None:
@@ -496,6 +648,7 @@ class TrainEngine:
                     drain_one()
         while pending:
             drain_one()
+        self._join_checkpoint()
         return history, st["solved"]
 
     @staticmethod

@@ -25,38 +25,49 @@ from repro.rl.engine import TrainEngine
 from repro.rl.learner import TrainState
 
 
+def ocean_policy_stack(env, hidden: int = 128, recurrent: bool = False,
+                       conv: bool = None):
+    """Derive ``(Emulated, Dist, OceanPolicy)`` from a raw Ocean-protocol
+    env — the ONE place the env→policy derivation lives (action kind from
+    the emulated action spec, the CNN frontend from ``obs_frontend``).
+    Used by the Trainer, the league (build_league, CLI), and benchmarks."""
+    from repro.core import spaces as sp
+    em = Emulated(env)
+    if em.act_spec.kind == "discrete":
+        dist = Dist("categorical", nvec=em.act_spec.nvec)
+    else:       # continuous actions — paper §8 extension
+        dist = Dist("gaussian", cont_dim=em.act_spec.cont_dim)
+    # pixel envs opt in to the CNN frontend via `obs_frontend = "conv"`;
+    # the policy then restores the emulated-flat obs to its 2D layout
+    if conv is None:
+        conv = getattr(env, "obs_frontend", None) == "conv"
+    conv_shape = None
+    if conv:
+        space = env.observation_space
+        if not (isinstance(space, sp.Box) and len(space.shape) == 2):
+            raise ValueError(
+                f"conv frontend needs a single 2D Box observation, got "
+                f"{space}")
+        conv_shape = space.shape
+    policy = OceanPolicy(em.obs_spec.total, dist.nvec, hidden=hidden,
+                         recurrent=recurrent,
+                         num_outputs=dist.num_outputs,
+                         conv_shape=conv_shape)
+    return em, dist, policy
+
+
 class Trainer:
     def __init__(self, env, tcfg: TrainConfig = None, hidden: int = 128,
                  recurrent: bool = False, seed: int = 0,
                  kernel_mode: str = None, log_dir: str = None,
                  backend: str = None, updates_per_launch: int = None,
                  mesh=None, conv: bool = None):
-        from repro.core import spaces as sp
         from repro.utils.metrics import MetricsLogger
         self.logger = MetricsLogger(log_dir,
                                     run_name=type(env).__name__.lower())
         self.tcfg = tcfg or TrainConfig()
-        self.em = Emulated(env)
-        if self.em.act_spec.kind == "discrete":
-            self.dist = Dist("categorical", nvec=self.em.act_spec.nvec)
-        else:   # continuous actions — paper §8 extension
-            self.dist = Dist("gaussian", cont_dim=self.em.act_spec.cont_dim)
-        # pixel envs opt in to the CNN frontend via `obs_frontend = "conv"`;
-        # the policy then restores the emulated-flat obs to its 2D layout
-        if conv is None:
-            conv = getattr(env, "obs_frontend", None) == "conv"
-        conv_shape = None
-        if conv:
-            space = env.observation_space
-            if not (isinstance(space, sp.Box) and len(space.shape) == 2):
-                raise ValueError(
-                    f"conv frontend needs a single 2D Box observation, got "
-                    f"{space}")
-            conv_shape = space.shape
-        self.policy = OceanPolicy(self.em.obs_spec.total, self.dist.nvec,
-                                  hidden=hidden, recurrent=recurrent,
-                                  num_outputs=self.dist.num_outputs,
-                                  conv_shape=conv_shape)
+        self.em, self.dist, self.policy = ocean_policy_stack(
+            env, hidden=hidden, recurrent=recurrent, conv=conv)
         self.engine = TrainEngine(self.em, self.policy, self.tcfg, self.dist,
                                   key=jax.random.PRNGKey(seed),
                                   backend=backend,
@@ -83,12 +94,20 @@ class Trainer:
 
     def train(self, total_steps: int, log_every: int = 0,
               target_score: Optional[float] = None,
-              checkpoint_dir: Optional[str] = None):
+              checkpoint_dir: Optional[str] = None, resume: bool = False):
         """Run until total env interactions ≥ total_steps (or solved).
-        ``target_score`` and checkpointing are engine callbacks checked at
-        launch boundaries (identical to per-update for K = 1)."""
-        ce = self.tcfg.checkpoint_every
-        saved_through = [0]
+        ``target_score`` is checked at launch boundaries (identical to
+        per-update for K = 1). With ``checkpoint_dir`` the engine saves its
+        full resumable state every ``tcfg.checkpoint_every`` updates
+        (async, at the launch boundary); ``resume=True`` restores the
+        newest committed checkpoint first and continues from its update
+        count."""
+        from repro.checkpoint import ckpt
+        if checkpoint_dir:
+            self.engine.checkpoint_dir = checkpoint_dir
+            if resume and ckpt.latest(checkpoint_dir) is not None:
+                u0 = self.engine.restore(checkpoint_dir)
+                print(f"  resumed at update {u0}")
         pending_log = []
 
         def on_update(u, m):
@@ -104,16 +123,14 @@ class Trainer:
                       f"kl {m['approx_kl']:.4f} "
                       f"sps {m['sps']:.0f}")
 
-        def on_launch(updates_done):
-            if checkpoint_dir and updates_done // ce > saved_through[0] // ce:
-                self.save(checkpoint_dir)
-                saved_through[0] = updates_done
-
         _, solved = self.engine.run(total_steps, target_score=target_score,
-                                    on_update=on_update, on_launch=on_launch)
+                                    on_update=on_update)
         if pending_log:
             self.logger.log_batch(pending_log)
-        return solved if solved is not None else self.history[-1]
+        if solved is not None:
+            return solved
+        # a fully-resumed run may have no new updates to report
+        return self.history[-1] if self.history else {}
 
     def save(self, ckpt_dir: str):
         from repro.checkpoint import ckpt

@@ -210,3 +210,97 @@ def test_check_that_raises_is_reported_not_crashed():
     assert not report.ok
     assert any("boom" in v or "RuntimeError" in v
                for v in report.violations)
+
+
+# -- selfplay (competitive-env) profile ---------------------------------------
+
+def test_duel_passes_selfplay_profile():
+    from repro.envs.conformance import SELFPLAY_CHECKS, check_selfplay_env
+    report = check_selfplay_env("duel")
+    assert report.ok, "\n" + report.summary()
+    assert len(report.results) == len(SELFPLAY_CHECKS)
+    assert report.env_name == "selfplay/duel"
+
+
+def test_selfplay_profile_catches_broken_zero_sum():
+    """A per-step bonus paid to both sides breaks the zero-sum invariant
+    and must be caught by exactly that check."""
+    from repro.envs.conformance import check_selfplay_env
+    from repro.envs.ocean import Duel
+
+    class LeakyDuel(_Wrapped):
+        def __init__(self):
+            super().__init__(Duel())
+            self.swap_agents = self._env.swap_agents
+
+        def step(self, state, action, key):
+            s, obs, rew, done, info = self._env.step(state, action, key)
+            return s, obs, rew + 0.01, done, info      # both rows gain
+
+    report = check_selfplay_env(LeakyDuel())
+    assert not report.ok
+    assert any("zero-sum" in v for v in _violations(report, "zero_sum"))
+
+
+def test_selfplay_profile_catches_role_asymmetry():
+    """An env that pays a positional bonus to agent row 0 is not symmetric
+    under the agent-row permutation — the role_swap check must flag it."""
+    from repro.envs.conformance import check_selfplay_env
+    from repro.envs.ocean import Duel
+
+    class HomeAdvantageDuel(_Wrapped):
+        def __init__(self):
+            super().__init__(Duel())
+            self.swap_agents = self._env.swap_agents
+
+        def step(self, state, action, key):
+            s, obs, rew, done, info = self._env.step(state, action, key)
+            bonus = jnp.asarray([0.01, -0.01])         # row 0 always favored
+            return s, obs, rew + bonus, done, info
+
+    report = check_selfplay_env(HomeAdvantageDuel())
+    assert not report.ok
+    assert any("row-reversed reward" in v
+               for v in _violations(report, "role_swap"))
+
+
+def test_selfplay_profile_requires_swap_agents():
+    from repro.envs.conformance import check_selfplay_env
+    from repro.envs.ocean import Duel
+
+    class NoSwap(_Wrapped):
+        def __init__(self):
+            super().__init__(Duel())
+
+    report = check_selfplay_env(NoSwap())
+    assert any("swap_agents" in v for v in _violations(report, "role_swap"))
+
+
+def test_selfplay_profile_catches_per_agent_done():
+    from repro.envs.conformance import check_selfplay_env
+    from repro.envs.ocean import Duel
+
+    class PerAgentDone(_Wrapped):
+        def __init__(self):
+            super().__init__(Duel())
+            self.swap_agents = self._env.swap_agents
+
+        def step(self, state, action, key):
+            s, obs, rew, done, info = self._env.step(state, action, key)
+            return s, obs, rew, jnp.stack([done, done]), info
+
+    report = check_selfplay_env(PerAgentDone())
+    assert any("episode-scoped scalar done" in v
+               for v in _violations(report, "team_done"))
+
+
+def test_selfplay_profile_rejects_single_agent_env():
+    from repro.envs.conformance import check_selfplay_env
+    report = check_selfplay_env("bandit")
+    assert any("multi-agent" in v for v in _violations(report, "zero_sum"))
+
+
+def test_selfplay_cli_lane():
+    """--selfplay routes the conformance CLI through the league profile."""
+    from repro.envs.conformance import run_cli
+    assert run_cli("duel", selfplay=True) == 0

@@ -281,3 +281,103 @@ def test_ocean_ii_envs_run_on_every_tier(name, backend):
     assert np.isfinite(m["loss"]) and np.isfinite(m["entropy"])
     if name == "pong":
         assert tr.policy.conv_shape == (6, 6)   # CNN frontend engaged
+
+
+# ===================== periodic checkpointing + resume =======================
+
+CKPT_TCFG = TrainConfig(num_envs=16, unroll_length=16, update_epochs=2,
+                        num_minibatches=2, learning_rate=1e-3, gamma=0.95,
+                        checkpoint_every=3)
+
+
+def test_resume_parity_jit(tmp_path):
+    """Interrupted-then-resumed == uninterrupted, bitwise: the checkpoint
+    carries TrainState + RNG key + rollout carry, so the resumed engine
+    replays exactly the launches the uninterrupted one would have run."""
+    from repro.envs.ocean import Bandit
+    a = _build(Bandit(), tcfg=CKPT_TCFG)
+    a.run(6 * a.steps_per_update)
+
+    b = _build(Bandit(), tcfg=CKPT_TCFG)
+    b.checkpoint_dir = str(tmp_path)
+    hist_b, _ = b.run(3 * b.steps_per_update)     # "interrupted" at update 3
+    assert len(hist_b) == 3
+
+    c = _build(Bandit(), tcfg=CKPT_TCFG, seed=1)  # seed irrelevant: restored
+    c.checkpoint_dir = str(tmp_path)
+    assert c.restore() == 3
+    hist_c, _ = c.run(6 * c.steps_per_update)
+    assert len(hist_c) == 3                       # only the remaining updates
+    assert hist_c[0]["env_steps"] == 4 * c.steps_per_update
+    for x, y in zip(jax.tree.leaves(a.ts.params), jax.tree.leaves(c.ts.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resume_parity_recurrent_and_fused(tmp_path):
+    """Same bitwise property with an LSTM policy and K=2 fused launches —
+    the policy carry and the launch-boundary key schedule both restore."""
+    from repro.envs.ocean import Memory
+    a = _build(Memory(), tcfg=CKPT_TCFG, recurrent=True,
+               updates_per_launch=2)
+    a.run(6 * a.steps_per_update)
+
+    b = _build(Memory(), tcfg=CKPT_TCFG, recurrent=True,
+               updates_per_launch=2)
+    b.checkpoint_dir = str(tmp_path)
+    b.run(4 * b.steps_per_update)                 # checkpoints at update 4
+    c = _build(Memory(), tcfg=CKPT_TCFG, recurrent=True,
+               updates_per_launch=2, seed=9)
+    c.checkpoint_dir = str(tmp_path)
+    assert c.restore() == 4
+    c.run(6 * c.steps_per_update)
+    for x, y in zip(jax.tree.leaves(a.ts.params), jax.tree.leaves(c.ts.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_cadence_and_gc(tmp_path):
+    """Saves fire every checkpoint_every updates at the launch boundary and
+    the ring keeps tcfg.keep_checkpoints newest."""
+    import dataclasses
+    from repro.envs.ocean import Bandit
+    from repro.checkpoint import ckpt
+    tcfg = dataclasses.replace(CKPT_TCFG, checkpoint_every=2,
+                               keep_checkpoints=2)
+    e = _build(Bandit(), tcfg=tcfg)
+    e.checkpoint_dir = str(tmp_path)
+    e.run(7 * e.steps_per_update)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    assert steps == [4, 6]                        # 2 kept of 2,4,6
+    assert ckpt.latest(str(tmp_path)).endswith("step_6")
+
+
+def test_pool_tier_checkpoints_and_resumes(tmp_path):
+    """The pool tier saves TrainState + key (its env state is host-side)
+    and a fresh engine resumes from the restored update count."""
+    from repro.envs.ocean import Bandit
+    e = _build(Bandit(), tcfg=CKPT_TCFG, backend="pool")
+    e.checkpoint_dir = str(tmp_path)
+    hist, _ = e.run(4 * e.steps_per_update)
+    assert len(hist) == 4 and os.path.isdir(tmp_path / "step_3")
+
+    e2 = _build(Bandit(), tcfg=CKPT_TCFG, backend="pool")
+    e2.checkpoint_dir = str(tmp_path)
+    assert e2.restore() == 3
+    hist2, _ = e2.run(5 * e2.steps_per_update)
+    assert len(hist2) == 2                        # updates 3 and 4
+    assert hist2[0]["env_steps"] == 4 * e2.steps_per_update
+
+
+def test_trainer_resume_flag(tmp_path):
+    """Trainer.train(checkpoint_dir=..., resume=True) restores the newest
+    committed engine checkpoint and continues the update count."""
+    from repro.envs.ocean import Bandit
+    from repro.rl.trainer import Trainer
+    tr = Trainer(Bandit(), CKPT_TCFG, hidden=32, kernel_mode="ref")
+    tr.train(3 * tr.steps_per_update, checkpoint_dir=str(tmp_path))
+
+    tr2 = Trainer(Bandit(), CKPT_TCFG, hidden=32, kernel_mode="ref")
+    m = tr2.train(6 * tr2.steps_per_update, checkpoint_dir=str(tmp_path),
+                  resume=True)
+    assert len(tr2.history) == 3                  # updates 3..5 only
+    assert m["env_steps"] == 6 * tr2.steps_per_update

@@ -1,0 +1,401 @@
+"""Policy League: store versioning/round-trip, Elo ranker, samplers, the
+vmapped arena, selfplay engine tiers, and the Duel acceptance smoke."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.core.emulation import Emulated
+from repro.envs.ocean import OCEAN, Duel
+from repro.league import (Arena, OpponentSampler, PolicyStore, Ranker,
+                          SelfPlay, run_selfplay)
+from repro.models.policy import OceanPolicy
+from repro.rl.distributions import Dist
+from repro.rl.engine import TrainEngine
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TCFG = TrainConfig(num_envs=16, unroll_length=16, update_epochs=2,
+                   num_minibatches=2, learning_rate=1e-3, gamma=0.95)
+
+
+def _policy(env, hidden=32, recurrent=False):
+    em = Emulated(env)
+    dist = Dist("categorical", nvec=em.act_spec.nvec)
+    pol = OceanPolicy(em.obs_spec.total, dist.nvec, hidden=hidden,
+                      recurrent=recurrent, num_outputs=dist.num_outputs)
+    return em, dist, pol
+
+
+# =========================== PolicyStore =====================================
+
+def test_store_roundtrip_and_metadata(tmp_path):
+    _, _, pol = _policy(Duel())
+    store = PolicyStore(str(tmp_path))
+    p0 = pol.init(jax.random.PRNGKey(0))
+    p1 = pol.init(jax.random.PRNGKey(1))
+    v0 = store.add(p0, step=0, score=0.5)
+    v1 = store.add(p1, step=1000, score=0.7, rating=1100.0)
+    assert (v0, v1) == (0, 1) and store.versions() == [0, 1]
+    assert store.latest() == 1 and len(store) == 2
+    assert store.meta(1) == {"step": 1000, "score": 0.7, "rating": 1100.0}
+    # v1 inherits nothing; a v2 with no explicit rating inherits v1's
+    v2 = store.add(p0, step=2000)
+    assert store.meta(2)["rating"] == 1100.0
+    r = store.load(v1, pol.abstract())
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a second handle on the same directory sees the same league
+    store2 = PolicyStore(str(tmp_path))
+    assert store2.versions() == [0, 1, 2]
+    assert store2.meta(1)["rating"] == 1100.0
+
+
+def test_store_load_stacked(tmp_path):
+    _, _, pol = _policy(Duel())
+    store = PolicyStore(str(tmp_path))
+    trees = [pol.init(jax.random.PRNGKey(i)) for i in range(3)]
+    for t in trees:
+        store.add(t)
+    stacked = store.load_stacked([0, 1, 2], pol.abstract())
+    for name in ("enc1", "act"):
+        assert stacked[name].shape == (3,) + trees[0][name].shape
+        for i in range(3):
+            np.testing.assert_array_equal(stacked[name][i],
+                                          np.asarray(trees[i][name]))
+
+
+MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np, sys
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core.emulation import Emulated
+from repro.envs.ocean import Duel
+from repro.league import PolicyStore
+from repro.models.policy import OceanPolicy
+from repro.rl.distributions import Dist
+
+d = sys.argv[1]
+em = Emulated(Duel())
+dist = Dist("categorical", nvec=em.act_spec.nvec)
+pol = OceanPolicy(em.obs_spec.total, dist.nvec, hidden=32,
+                  num_outputs=dist.num_outputs)
+store = PolicyStore(d)
+mesh1 = jax.make_mesh((8,), ("data",))
+params = jax.device_put(pol.init(jax.random.PRNGKey(3)),
+                        NamedSharding(mesh1, P()))
+v = store.add(jax.device_get(params))
+# restore the snapshot assembled directly onto a DIFFERENT (2x4) mesh
+mesh2 = jax.make_mesh((2, 4), ("a", "b"))
+sh = jax.tree.map(lambda _: NamedSharding(mesh2, P()), pol.abstract())
+r = store.load(v, pol.abstract(), shardings=sh)
+for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(r)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert b.sharding.mesh.shape == {"a": 2, "b": 4}
+print("MESH_ROUNDTRIP_OK")
+"""
+
+
+def test_store_roundtrip_across_mesh_change(tmp_path):
+    """Snapshot saved under an 8-way mesh restores assembled onto a 2x4
+    mesh — the elastic property selfplay relies on when a league trained on
+    one topology resumes on another."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", MESH_SCRIPT, str(tmp_path)],
+                         capture_output=True, text=True, env=env, cwd=ROOT)
+    assert "MESH_ROUNDTRIP_OK" in out.stdout, out.stderr[-2000:]
+
+
+# =============================== Ranker ======================================
+
+def test_ranker_elo_updates_are_zero_sum():
+    r = Ranker()
+    r.update(0, 1, 1.0)
+    assert r.rating(0) > 1000.0 > r.rating(1)
+    assert abs(r.rating(0) + r.rating(1) - 2000.0) < 1e-9
+    # upset moves more rating than an expected win
+    r2 = Ranker({0: 1200.0, 1: 800.0})
+    r2.update(1, 0, 1.0)                     # 800 beats 1200
+    upset_gain = r2.rating(1) - 800.0
+    r3 = Ranker({0: 1200.0, 1: 800.0})
+    r3.update(0, 1, 1.0)                     # favorite wins
+    fav_gain = r3.rating(0) - 1200.0
+    assert upset_gain > fav_gain > 0
+
+
+def test_ranker_recovers_planted_skill_ordering():
+    """5 planted skill tiers, noisy Bernoulli match outcomes under a
+    logistic skill-gap model: Elo must recover the exact order."""
+    skills = {0: -2.0, 1: -1.0, 2: 0.0, 3: 1.0, 4: 2.0}
+    rng = np.random.default_rng(7)
+    ranker = Ranker()
+    for _ in range(400):
+        a, b = rng.choice(5, size=2, replace=False)
+        p_a = 1.0 / (1.0 + np.exp(-(skills[a] - skills[b])))
+        ranker.update(int(a), int(b), float(rng.random() < p_a))
+    assert ranker.rank() == [4, 3, 2, 1, 0], ranker.ratings
+
+
+# ============================== Samplers =====================================
+
+def _seeded_store(tmp_path, pol, n=5):
+    store = PolicyStore(str(tmp_path))
+    for i in range(n):
+        store.add(pol.init(jax.random.PRNGKey(i)))
+    return store
+
+
+@pytest.mark.parametrize("strategy", ["latest", "uniform", "prioritized"])
+def test_sampler_determinism_under_fixed_seed(tmp_path, strategy):
+    _, _, pol = _policy(Duel())
+    store = _seeded_store(tmp_path, pol)
+    ranker = Ranker({0: 900.0, 1: 950.0, 2: 1000.0, 3: 1050.0, 4: 1060.0})
+    draws = []
+    for _ in range(2):
+        s = OpponentSampler(store, ranker, pol.abstract(),
+                            strategy=strategy, seed=123)
+        draws.append([s.sample() for _ in range(20)])
+    assert draws[0] == draws[1]
+    if strategy == "latest":
+        assert set(draws[0]) == {4}
+
+
+def test_prioritized_sampler_favors_rating_proximity(tmp_path):
+    """With one version rated far below the learner anchor, prioritized
+    sampling should pick it much less often than the peers."""
+    _, _, pol = _policy(Duel())
+    store = _seeded_store(tmp_path, pol)
+    ranker = Ranker({0: 200.0, 1: 1000.0, 2: 1000.0, 3: 1000.0, 4: 1000.0})
+    s = OpponentSampler(store, ranker, pol.abstract(),
+                        strategy="prioritized", seed=0, temperature=100.0)
+    draws = [s.sample() for _ in range(200)]
+    assert draws.count(0) < 0.1 * len(draws)
+    # repeat loads of one version come from the cache (no store I/O)
+    s2 = OpponentSampler(store, ranker, pol.abstract(), strategy="latest",
+                         seed=0)
+    assert s2.next_params() is s2.next_params()
+
+
+def test_sampler_empty_store_raises(tmp_path):
+    _, _, pol = _policy(Duel())
+    store = PolicyStore(str(tmp_path / "empty"))
+    s = OpponentSampler(store, Ranker(), pol.abstract())
+    with pytest.raises(ValueError, match="empty"):
+        s.sample()
+
+
+# ================================ Arena ======================================
+
+def test_arena_vmapped_pool_matches_sequential():
+    """The one-launch vmapped K-opponent evaluation must produce exactly
+    the per-opponent results of K sequential dispatches (same keys)."""
+    em, dist, pol = _policy(Duel())
+    arena = Arena(em, pol, dist, num_envs=4, steps=40)
+    pa = pol.init(jax.random.PRNGKey(0))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[pol.init(jax.random.PRNGKey(i))
+                             for i in range(1, 5)])
+    key = jax.random.PRNGKey(42)
+    pooled = arena.vs_pool(pa, stacked, key)
+    seq = arena.vs_pool_sequential(pa, stacked, key)
+    assert len(pooled) == len(seq) == 4
+    for a, b in zip(pooled, seq):
+        for k in ("wins_a", "wins_b", "draws", "episodes", "outcome"):
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-6, err_msg=k)
+
+
+def test_arena_round_robin_records():
+    em, dist, pol = _policy(Duel())
+    arena = Arena(em, pol, dist, num_envs=4, steps=40)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[pol.init(jax.random.PRNGKey(i))
+                             for i in range(3)])
+    recs = arena.round_robin(stacked, [10, 11, 12], jax.random.PRNGKey(0))
+    assert [(a, b) for a, b, _ in recs] == [(10, 11), (10, 12), (11, 12)]
+    for _, _, outcome in recs:
+        assert 0.0 <= outcome <= 1.0
+    ranker = Ranker()
+    ranker.record(recs)
+    assert set(ranker.ratings) == {10, 11, 12}
+
+
+def test_arena_outcomes_are_mirror_consistent():
+    """Zero-sum env + side-0-centric score: every completed episode is
+    exactly one of win/draw/loss, so outcomes always lie in [0, 1] and the
+    counts add up."""
+    em, dist, pol = _policy(Duel())
+    arena = Arena(em, pol, dist, num_envs=8, steps=66)
+    pa, pb = (pol.init(jax.random.PRNGKey(i)) for i in range(2))
+    r = arena.play(pa, pb, jax.random.PRNGKey(5))
+    assert r["episodes"] == r["wins_a"] + r["wins_b"] + r["draws"]
+    assert r["episodes"] >= 8            # 66 steps of horizon-32 episodes
+    assert 0.0 <= r["outcome"] <= 1.0
+
+
+def test_arena_rejects_single_agent_env():
+    from repro.envs.ocean import Bandit
+    em, dist, pol = _policy(Bandit())
+    with pytest.raises(ValueError, match="multi-agent"):
+        Arena(em, dist=dist, policy=pol)
+
+
+# ========================= selfplay engine tier ==============================
+
+def _selfplay_engine(env, backend="jit", recurrent=False, learner_agents=0,
+                     tcfg=TCFG):
+    em, dist, pol = _policy(env, recurrent=recurrent)
+    opp = pol.init(jax.random.PRNGKey(99))
+    return TrainEngine(em, pol, tcfg, dist, key=jax.random.PRNGKey(0),
+                       backend=backend, kernel_mode="ref",
+                       selfplay=SelfPlay(lambda: opp, learner_agents))
+
+
+@pytest.mark.parametrize("name,recurrent",
+                         [("duel", False), ("multiagent", False),
+                          ("tagteam", False), ("duel", True)])
+def test_selfplay_smoke(name, recurrent):
+    """Self-play splits rows and trains on the competitive env AND on the
+    ordinary multi-agent envs (Multiagent A=2, TagTeam A=6 with padding)."""
+    e = _selfplay_engine(OCEAN[name](), recurrent=recurrent)
+    hist, _ = e.run(2 * e.steps_per_update)
+    assert len(hist) == 2
+    assert np.isfinite(hist[-1]["loss"]) and np.isfinite(hist[-1]["entropy"])
+
+
+def test_selfplay_opponent_resampled_each_launch():
+    em, dist, pol = _policy(Duel())
+    calls = {"n": 0}
+
+    def next_opponent():
+        calls["n"] += 1
+        return pol.init(jax.random.PRNGKey(calls["n"]))
+
+    e = TrainEngine(em, pol, TCFG, dist, key=jax.random.PRNGKey(0),
+                    kernel_mode="ref", updates_per_launch=2,
+                    selfplay=SelfPlay(next_opponent))
+    e.run(6 * e.steps_per_update)        # 3 launches of K=2
+    assert calls["n"] == 3
+
+
+def test_selfplay_learner_actually_learns_vs_frozen():
+    """Against a FROZEN opponent the learner's score must climb well past
+    the 0.5 symmetry point — opponent rows are part of the env, not of the
+    PPO batch."""
+    tcfg = TrainConfig(num_envs=32, unroll_length=32, update_epochs=2,
+                       num_minibatches=2, learning_rate=1e-3, gamma=0.95)
+    e = _selfplay_engine(Duel(), tcfg=tcfg)
+    hist, _ = e.run(40 * e.steps_per_update)
+    late = [m["score"] for m in hist[-5:] if m["episodes"] > 0]
+    assert np.mean(late) > 0.7, late
+
+
+def test_selfplay_rejects_bad_configs():
+    from repro.envs.ocean import Bandit
+    em, dist, pol = _policy(Bandit())
+    opp = pol.init(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="multi-agent"):
+        TrainEngine(em, pol, TCFG, dist, key=jax.random.PRNGKey(0),
+                    selfplay=SelfPlay(lambda: opp))
+    em2, dist2, pol2 = _policy(Duel())
+    with pytest.raises(ValueError, match="learner_agents"):
+        TrainEngine(em2, pol2, TCFG, dist2, key=jax.random.PRNGKey(0),
+                    selfplay=SelfPlay(lambda: opp, learner_agents=2))
+    with pytest.raises(ValueError, match="tiers"):
+        TrainEngine(em2, pol2, TCFG, dist2, key=jax.random.PRNGKey(0),
+                    backend="pool", selfplay=SelfPlay(lambda: opp))
+
+
+SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from repro.configs.base import TrainConfig
+from repro.core.emulation import Emulated
+from repro.envs.ocean import Duel
+from repro.league import SelfPlay
+from repro.models.policy import OceanPolicy
+from repro.rl.distributions import Dist
+from repro.rl.engine import TrainEngine
+
+tcfg = TrainConfig(num_envs=16, unroll_length=16, update_epochs=2,
+                   num_minibatches=2, learning_rate=1e-3, gamma=0.95)
+
+def build(backend, num_shards=1):
+    em = Emulated(Duel())
+    dist = Dist("categorical", nvec=em.act_spec.nvec)
+    pol = OceanPolicy(em.obs_spec.total, dist.nvec, hidden=32,
+                      num_outputs=dist.num_outputs)
+    opp = pol.init(jax.random.PRNGKey(99))
+    return TrainEngine(em, pol, tcfg, dist, key=jax.random.PRNGKey(0),
+                       backend=backend, kernel_mode="ref",
+                       num_shards=num_shards, selfplay=SelfPlay(lambda: opp))
+
+a = build("jit", num_shards=4)
+a.run(3 * a.steps_per_update)
+b = build("shard_map")
+b.run(3 * b.steps_per_update)
+d = max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+        for x, y in zip(jax.tree.leaves(a.ts.params),
+                        jax.tree.leaves(b.ts.params)))
+assert d < 1e-5, d
+print("SELFPLAY_SHARD_PARITY_OK", d)
+"""
+
+
+@pytest.mark.multi_device
+def test_selfplay_shard_map_seed_parity():
+    """4-device shard_map selfplay is seed-matched with the single-device
+    4-block emulation — split rows keep the global-row key contract."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", SHARD_SCRIPT],
+                         capture_output=True, text=True, env=env, cwd=ROOT)
+    assert "SELFPLAY_SHARD_PARITY_OK" in out.stdout, out.stderr[-2000:]
+
+
+# ========================= run_selfplay driver ===============================
+
+def test_run_selfplay_builds_league(tmp_path):
+    """Short league run: versions accumulate (init + snapshots + final),
+    ratings persist to league.json, and the sampler's opponent schedule is
+    drawn from the store."""
+    tcfg = TrainConfig(num_envs=8, unroll_length=16, update_epochs=1,
+                       num_minibatches=2, learning_rate=1e-3, gamma=0.95)
+    res = run_selfplay(Duel(), tcfg, league_dir=str(tmp_path),
+                       total_steps=6 * 16 * 8 * 2, snapshot_every=2,
+                       hidden=16, seed=0)
+    assert len(res.history) == 6
+    assert len(res.store) >= 3           # v0 + >=1 snapshot + final
+    with open(tmp_path / "league.json") as f:
+        idx = json.load(f)
+    assert set(idx["versions"]) == {str(v) for v in res.store.versions()}
+    assert all(v in res.ranker.ratings for v in res.store.versions())
+    assert 0.0 <= res.winrate_random <= 1.0
+    # resuming the same league dir picks up the stored versions
+    res2 = run_selfplay(Duel(), tcfg, league_dir=str(tmp_path),
+                        total_steps=16 * 8 * 2, snapshot_every=2,
+                        hidden=16, seed=1)
+    assert len(res2.store) == len(res.store) + 1
+
+
+@pytest.mark.slow
+def test_duel_selfplay_beats_random_baseline():
+    """Acceptance: Duel self-play on the jit tier reaches >= 0.9 winrate
+    vs the random-policy baseline within the committed preset budget."""
+    import tempfile
+    from repro.configs.ocean import ocean_tcfg, preset
+    p = preset("duel")
+    tcfg = ocean_tcfg("duel", updates_per_launch=4)
+    with tempfile.TemporaryDirectory() as d:
+        res = run_selfplay(OCEAN["duel"](), tcfg, league_dir=d,
+                           total_steps=p.total_steps, snapshot_every=8,
+                           hidden=p.hidden, seed=0)
+    assert res.winrate_random >= p.target_score, (
+        f"duel selfplay winrate vs random {res.winrate_random:.3f} < "
+        f"{p.target_score} after {p.total_steps} steps")
