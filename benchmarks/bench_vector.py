@@ -38,7 +38,7 @@ def bench_serial(env, num_envs, steps):
     for i in range(steps):
         state, obs, *_ = vec.step(state, act, jax.random.fold_in(
             jax.random.PRNGKey(2), i))
-        _policy_like_work(obs).block_until_ready()
+        _policy_like_work(obs).block_until_ready()  # repro: noqa[HOST-SYNC] — measures per-step latency incl. the sync (deliberate)
     return steps * vec.batch_size / (time.perf_counter() - t0)
 
 
@@ -53,7 +53,7 @@ def bench_vmap(env, num_envs, steps):
     for i in range(steps):
         state, obs, *_ = vec.step(state, act, jax.random.fold_in(
             jax.random.PRNGKey(2), i))
-        _policy_like_work(obs).block_until_ready()
+        _policy_like_work(obs).block_until_ready()  # repro: noqa[HOST-SYNC] — measures per-step latency incl. the sync (deliberate)
     return steps * vec.batch_size / (time.perf_counter() - t0)
 
 

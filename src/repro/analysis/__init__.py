@@ -1,0 +1,30 @@
+"""repro.analysis — JAX-aware static checking for envs, policies, and the
+training stack itself.
+
+Two layers (see README §Static analysis):
+
+  * **AST lint** (zero execution): six rules for the hazard classes that
+    otherwise only surface at runtime — tracer-dependent Python control
+    flow, host syncs in hot loops, blocking queue calls without timeouts,
+    nondeterminism under jit, donated-buffer reuse, numpy/jax.numpy mixing.
+  * **jaxpr/HLO audit** (trace, never train): no host callbacks, retrace
+    ≤ 1 per arg signature, donation consumed in compiled HLO, no silent
+    f32→f64 promotion.
+
+CLI: ``python -m repro.analysis [paths | --self] [--format json]``.
+"""
+from repro.analysis.jaxpr_audit import (AuditResult, AuditViolation,
+                                        audit_fn, callback_eqns)
+from repro.analysis.lint import (apply_baseline, check_file, check_paths,
+                                 check_source, load_baseline, save_baseline)
+from repro.analysis.rules import RULES, Finding, Rule
+from repro.analysis.targets import (audit_all, audit_engine_tiers,
+                                    audit_kernel_ops, audit_ocean_envs)
+
+__all__ = [
+    "AuditResult", "AuditViolation", "audit_fn", "callback_eqns",
+    "apply_baseline", "check_file", "check_paths", "check_source",
+    "load_baseline", "save_baseline", "RULES", "Finding", "Rule",
+    "audit_all", "audit_engine_tiers", "audit_kernel_ops",
+    "audit_ocean_envs",
+]

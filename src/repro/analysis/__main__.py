@@ -1,0 +1,122 @@
+"""CLI for repro.analysis.
+
+    python -m repro.analysis path/to/env.py other_dir/   # lint your code
+    python -m repro.analysis --self                      # gate this repo:
+                                                         # self-lint + audit
+    python -m repro.analysis tests/ --report-only        # never fails CI
+    python -m repro.analysis --self --update-baseline    # regenerate the
+                                                         # grandfather file
+
+Exit status: 0 when no non-baselined lint findings and no audit violations;
+1 otherwise (``--report-only`` always exits 0).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import lint
+from repro.analysis.rules import RULES
+
+SELF_BASELINE = Path(__file__).resolve().parent / "self_baseline.json"
+_REPO_SRC = Path(__file__).resolve().parents[2]   # .../src
+
+
+def _self_paths():
+    root = _REPO_SRC.parent
+    paths = [_REPO_SRC / "repro"]
+    for extra in ("benchmarks",):
+        p = root / extra
+        if p.is_dir():
+            paths.append(p)
+    return paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static checks: AST lint + jaxpr/HLO audit")
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--self", action="store_true", dest="self_check",
+                    help="gate this repo: lint src/repro (+benchmarks) "
+                         "against the committed baseline and run the full "
+                         "jaxpr/HLO audit (kernels, engine tiers, envs)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON of grandfathered findings")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write current findings to the baseline and exit 0")
+    ap.add_argument("--report-only", action="store_true",
+                    help="print findings but always exit 0")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule IDs to run (default: all)")
+    ap.add_argument("--no-audit", action="store_true",
+                    help="with --self: skip the jaxpr/HLO audit layer")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this file")
+    args = ap.parse_args(argv)
+
+    if not args.self_check and not args.paths:
+        ap.error("give paths to lint, or --self")
+    paths = _self_paths() if args.self_check else args.paths
+    baseline = args.baseline or (str(SELF_BASELINE) if args.self_check
+                                 else None)
+    rules = ([r.strip().upper() for r in args.rules.split(",")]
+             if args.rules else None)
+
+    all_findings = []
+    for f in lint.iter_python_files(paths):
+        all_findings.extend(lint.check_file(f, rules=rules))
+
+    if args.update_baseline:
+        target = baseline or "analysis_baseline.json"
+        lint.save_baseline(all_findings, target)
+        print(f"baseline: {len(all_findings)} finding(s) -> {target}")
+        return 0
+
+    fresh = lint.apply_baseline(all_findings, lint.load_baseline(baseline))
+    grandfathered = len(all_findings) - len(fresh)
+
+    audits = []
+    if args.self_check and not args.no_audit:
+        from repro.analysis.targets import audit_all
+        audits = audit_all()
+    violations = [v for a in audits for v in a.violations]
+
+    report = {
+        "findings": [f.to_dict() for f in fresh],
+        "grandfathered": grandfathered,
+        "audit": {
+            "targets": len(audits),
+            "passed": sum(a.ok for a in audits),
+            "violations": [v.to_dict() for v in violations],
+        },
+        "rules": {rid: r.summary for rid, r in RULES.items()},
+    }
+    if args.out:
+        Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+
+    if args.format == "json":
+        print(json.dumps(report, indent=2))
+    else:
+        for f in fresh:
+            print(f.render())
+        for v in violations:
+            print(v.render())
+        bits = [f"{len(fresh)} finding(s)"]
+        if grandfathered:
+            bits.append(f"{grandfathered} baselined")
+        if audits:
+            bits.append(f"audit {sum(a.ok for a in audits)}/{len(audits)} "
+                        f"targets clean")
+        print("repro.analysis: " + ", ".join(bits))
+
+    if args.report_only:
+        return 0
+    return 1 if (fresh or violations) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,720 @@
+"""The JAX-aware AST lint rules — the pluggable half of ``repro.analysis``.
+
+Each rule is a function ``fn(ctx: ModuleContext) -> Iterator[Finding]``
+registered under a stable ID (``TRACER-BRANCH``, ``HOST-SYNC``, …). The
+heavy lifting — which functions run under a JAX trace, which local names
+hold tracers — is done once per module by :func:`build_context` and shared
+by every rule, so adding a rule is ~20 lines.
+
+What "traced" means statically (the approximation every rule builds on):
+
+  * a function decorated with ``jax.jit`` / ``jax.vmap`` / … (including
+    ``functools.partial(jax.jit, …)`` decorators),
+  * a function (or lambda) passed by name to a trace entry point —
+    ``jax.jit``, ``jax.grad``, ``jax.lax.scan`` / ``while_loop`` /
+    ``cond`` / ``switch`` / ``fori_loop``, ``shard_map``, ``pallas_call``,
+    ``jax.make_jaxpr`` — anywhere in the module,
+  * any function lexically nested inside a traced function (its body runs
+    at trace time), and
+  * any local function a traced function calls by bare name (transitively):
+    this is the reachability that makes ``NONDET-IN-PURE`` catch a
+    ``time.time()`` two helper calls below the jitted entry point.
+
+Within a traced function, the *parameters* are assumed to be tracers
+(``self``/``cls`` excluded) and taint propagates through simple
+assignments. Uses that are static even on tracers — ``x.shape``,
+``x.dtype``, ``x.ndim``, ``len(x)``, ``isinstance(x, …)`` — never count,
+which is what keeps shape-driven Python control flow (the dominant legal
+pattern) out of the findings.
+
+Cross-module tracing (an env ``step`` method jitted by a *caller* in
+another file) is invisible to this layer by design — that is exactly what
+the runtime half, ``analysis.jaxpr_audit``, covers.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
+
+# ---------------------------------------------------------------------------
+# findings + registry
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    snippet: str = ""
+
+    def key(self) -> tuple:
+        """Line-number-insensitive identity used by the baseline file: a
+        finding survives unrelated edits above it."""
+        return (self.path, self.rule, " ".join(self.snippet.split()))
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "snippet": self.snippet}
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"{self.message}")
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+    fn: Callable
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, summary: str):
+    def deco(fn):
+        RULES[rule_id] = Rule(rule_id, summary, fn)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# module context
+
+# attribute reads that are static even on a tracer — never taint evidence
+# (num_agents/horizon are static env class attributes throughout this stack)
+STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "aval", "weak_type",
+                "sharding", "itemsize", "nbytes", "num_agents", "horizon"}
+# calls whose result is static/hashable regardless of tracer args
+STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "type", "id",
+                "repr", "str"}
+
+# trace entry points: callables whose function-valued arguments run under
+# trace. Bare names on the left may appear un-prefixed (common imports);
+# names on the right are only recognized with a jax/lax/pl prefix (too
+# generic to match bare).
+_ENTRY_BARE = {"jit", "vmap", "pmap", "grad", "value_and_grad", "shard_map",
+               "pallas_call", "checkpoint", "remat", "make_jaxpr",
+               "while_loop", "fori_loop", "associative_scan"}
+_ENTRY_DOTTED = _ENTRY_BARE | {"scan", "cond", "switch", "map", "eval_shape"}
+_JAX_ROOTS = {"jax", "lax", "pl", "pltpu", "plgpu"}
+
+_NONDET_ROOTS = {"time", "random", "datetime", "secrets", "uuid"}
+
+# numpy attributes that are legal under trace (dtypes, scalars, constants —
+# used as annotations/arguments, not as array ops)
+_NUMPY_OK = {"float16", "float32", "float64", "int4", "int8", "int16",
+             "int32", "int64", "uint4", "uint8", "uint16", "uint32",
+             "uint64", "bool_", "complex64", "complex128", "bfloat16",
+             "dtype", "ndarray", "generic", "number", "integer", "floating",
+             "signedinteger", "unsignedinteger", "inexact", "pi", "e",
+             "inf", "nan", "newaxis", "issubdtype", "promote_types",
+             "result_type", "iinfo", "finfo"}
+
+_BLOCKING_GATE_IMPORTS = {"threading", "queue", "multiprocessing", "socket",
+                          "concurrent", "concurrent.futures"}
+
+
+@dataclass
+class FuncInfo:
+    node: ast.AST                      # FunctionDef | AsyncFunctionDef | Lambda
+    name: str
+    qualname: str
+    parent: Optional[ast.AST]          # enclosing function node or None
+    traced: bool = False
+    trace_reason: str = ""
+    # params declared static via the jit decorator's static_argnames /
+    # static_argnums — excluded from taint (they are Python values at trace
+    # time, so branching on them is legal)
+    static_params: Set[str] = field(default_factory=set)
+
+
+@dataclass
+class ModuleContext:
+    path: str
+    source: str
+    lines: List[str]
+    tree: ast.Module
+    funcs: Dict[int, FuncInfo] = field(default_factory=dict)  # id(node) -> info
+    parents: Dict[int, ast.AST] = field(default_factory=dict)  # id(node) -> parent
+    module_aliases: Dict[str, str] = field(default_factory=dict)  # alias->module
+    from_imports: Dict[str, str] = field(default_factory=dict)  # name->module
+    has_threading_imports: bool = False
+
+    # -- helpers shared by rules --------------------------------------------
+
+    def finding(self, rule_id: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        snippet = self.lines[line - 1].strip() if line <= len(self.lines) \
+            else ""
+        return Finding(rule_id, self.path, line, col, message, snippet)
+
+    def traced_funcs(self) -> List[FuncInfo]:
+        return [fi for fi in self.funcs.values() if fi.traced]
+
+    def func_of(self, node: ast.AST) -> Optional[FuncInfo]:
+        """The innermost function containing ``node`` (by parent chain)."""
+        cur = self.parents.get(id(node))
+        while cur is not None:
+            if id(cur) in self.funcs:
+                return self.funcs[id(cur)]
+            cur = self.parents.get(id(cur))
+        return None
+
+
+def dotted_chain(node: ast.AST) -> Tuple[str, ...]:
+    """``jax.lax.scan`` → ("jax", "lax", "scan"); () if not a name chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def body_stmts(fn_node: ast.AST) -> Iterator[ast.AST]:
+    """All nodes of a function body, NOT descending into nested function
+    definitions (those are separate traced contexts, checked on their own).
+    """
+    if isinstance(fn_node, ast.Lambda):
+        yield from ast.walk(fn_node.body)
+        return
+    stack = list(fn_node.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# annotations that declare a parameter to be a host value, not a tracer
+_HOST_ANNOTATIONS = {"int", "bool", "str", "bytes"}
+
+
+def _annotated_host(p: ast.arg) -> bool:
+    ann = p.annotation
+    ch = dotted_chain(ann) if ann is not None else ()
+    if not ch and isinstance(ann, ast.Constant) and \
+            isinstance(ann.value, str):           # string annotation
+        ch = tuple(ann.value.split("."))
+    return bool(ch) and (ch[-1] in _HOST_ANNOTATIONS
+                         or ch[-1].endswith("Config"))
+
+
+def _param_names(fn_node: ast.AST) -> Set[str]:
+    a = fn_node.args
+    params = list(getattr(a, "posonlyargs", [])) + a.args + a.kwonlyargs
+    names = [p.arg for p in params if not _annotated_host(p)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return {n for n in names if n not in ("self", "cls")}
+
+
+def _is_entry_call(ctx: ModuleContext, call: ast.Call) -> bool:
+    chain = dotted_chain(call.func)
+    if not chain or "tree" in chain:   # jax.tree.map is a host-side map
+        return False
+    last = chain[-1]
+    if len(chain) == 1:
+        return last in _ENTRY_BARE
+    return last in _ENTRY_DOTTED and (chain[0] in _JAX_ROOTS
+                                      or "jax" in chain or "lax" in chain)
+
+
+def _candidate_fn_exprs(call: ast.Call) -> Iterator[ast.AST]:
+    """Function-valued argument expressions of a trace-entry call."""
+    for arg in list(call.args) + [kw.value for kw in call.keywords]:
+        if isinstance(arg, (ast.Name, ast.Lambda)):
+            yield arg
+        elif isinstance(arg, ast.Call):
+            ch = dotted_chain(arg.func)
+            if ch and ch[-1] == "partial":
+                for inner in arg.args[:1]:
+                    if isinstance(inner, (ast.Name, ast.Lambda)):
+                        yield inner
+        elif isinstance(arg, (ast.List, ast.Tuple)):   # lax.switch branches
+            for el in arg.elts:
+                if isinstance(el, (ast.Name, ast.Lambda)):
+                    yield el
+
+
+def build_context(tree: ast.Module, source: str, path: str) -> ModuleContext:
+    ctx = ModuleContext(path=path, source=source,
+                        lines=source.splitlines(), tree=tree)
+
+    # parent map + function table
+    func_stack: List[Tuple[ast.AST, str]] = []
+
+    def visit(node, parent, qual):
+        ctx.parents[id(node)] = parent
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            name = getattr(node, "name", "<lambda>")
+            qn = f"{qual}.{name}" if qual else name
+            fn_parent = None
+            for anc, _ in reversed(func_stack):
+                fn_parent = anc
+                break
+            ctx.funcs[id(node)] = FuncInfo(node, name, qn, fn_parent)
+            func_stack.append((node, qn))
+            for child in ast.iter_child_nodes(node):
+                visit(child, node, qn)
+            func_stack.pop()
+        else:
+            for child in ast.iter_child_nodes(node):
+                visit(child, node, qual)
+
+    for top in tree.body:
+        visit(top, tree, "")
+
+    # imports
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for al in node.names:
+                ctx.module_aliases[al.asname or al.name.split(".")[0]] = \
+                    al.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for al in node.names:
+                ctx.from_imports[al.asname or al.name] = node.module
+    mods = set(ctx.module_aliases.values()) | {
+        m.split(".")[0] for m in ctx.from_imports.values()}
+    ctx.has_threading_imports = bool(mods & _BLOCKING_GATE_IMPORTS)
+
+    defs_by_name: Dict[str, List[FuncInfo]] = {}
+    for fi in ctx.funcs.values():
+        defs_by_name.setdefault(fi.name, []).append(fi)
+
+    # seed traced set: decorators + trace-entry call sites
+    def mark(fi: FuncInfo, reason: str):
+        if not fi.traced:
+            fi.traced = True
+            fi.trace_reason = reason
+
+    def grab_statics(fi: FuncInfo, call: ast.Call):
+        """static_argnames/static_argnums of a jit decorator → param names."""
+        if isinstance(fi.node, ast.Lambda):
+            return
+        a = fi.node.args
+        pos = [p.arg for p in list(getattr(a, "posonlyargs", [])) + a.args]
+        names = set(pos) | {p.arg for p in a.kwonlyargs}
+
+        def consts(v):
+            if isinstance(v, ast.Constant):
+                return [v.value]
+            return [e.value for e in getattr(v, "elts", [])
+                    if isinstance(e, ast.Constant)]
+
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                fi.static_params |= {c for c in consts(kw.value)
+                                     if isinstance(c, str) and c in names}
+            elif kw.arg == "static_argnums":
+                fi.static_params |= {pos[n] for n in consts(kw.value)
+                                     if isinstance(n, int) and n < len(pos)}
+
+    for fi in ctx.funcs.values():
+        for dec in getattr(fi.node, "decorator_list", []):
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            ch = dotted_chain(target)
+            if ch and ch[-1] == "partial" and isinstance(dec, ast.Call):
+                for inner in dec.args[:1]:
+                    ich = dotted_chain(inner)
+                    if ich and ich[-1] in _ENTRY_DOTTED:
+                        mark(fi, f"decorated with {'.'.join(ich)}")
+                        grab_statics(fi, dec)
+            elif ch and (ch[-1] in _ENTRY_BARE
+                         or (len(ch) > 1 and ch[-1] in _ENTRY_DOTTED
+                             and ch[0] in _JAX_ROOTS)):
+                mark(fi, f"decorated with {'.'.join(ch)}")
+                if isinstance(dec, ast.Call):
+                    grab_statics(fi, dec)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_entry_call(ctx, node):
+            entry = ".".join(dotted_chain(node.func))
+            for expr in _candidate_fn_exprs(node):
+                if isinstance(expr, ast.Lambda):
+                    fi = ctx.funcs.get(id(expr))
+                    if fi:
+                        mark(fi, f"passed to {entry}")
+                elif isinstance(expr, ast.Name):
+                    for fi in defs_by_name.get(expr.id, []):
+                        mark(fi, f"passed to {entry}")
+
+    # propagate: lexical nesting + bare-name local calls, to fixpoint
+    changed = True
+    while changed:
+        changed = False
+        for fi in ctx.funcs.values():
+            if fi.traced:
+                continue
+            par = fi.parent
+            if par is not None and ctx.funcs[id(par)].traced:
+                mark(fi, f"nested in traced "
+                         f"{ctx.funcs[id(par)].qualname}")
+                changed = True
+        for fi in ctx.funcs.values():
+            if not fi.traced:
+                continue
+            for node in body_stmts(fi.node):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Name):
+                    for callee in defs_by_name.get(node.func.id, []):
+                        if not callee.traced:
+                            mark(callee, f"called from traced {fi.qualname}")
+                            changed = True
+    return ctx
+
+
+# ---------------------------------------------------------------------------
+# taint: which local names hold tracers inside a traced function
+
+def _assign_targets(node) -> List[str]:
+    out = []
+
+    def grab(t):
+        if isinstance(t, ast.Name):
+            out.append(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                grab(el)
+        elif isinstance(t, ast.Starred):
+            grab(t.value)
+    if isinstance(node, ast.Assign):
+        for t in node.targets:
+            grab(t)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        grab(node.target)
+    elif isinstance(node, ast.For):
+        grab(node.target)
+    elif isinstance(node, ast.withitem) and node.optional_vars is not None:
+        grab(node.optional_vars)
+    return out
+
+
+def hot_names(expr: ast.AST, tainted: Set[str]) -> Set[str]:
+    """Tainted names used *non-statically* in ``expr``: a name only read
+    through ``.shape``/``.dtype``/``len()``/``isinstance()`` does not count.
+    """
+    found: Set[str] = set()
+
+    def walk(node):
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return                      # x.shape, x.dtype, ... — static
+        if isinstance(node, ast.Compare) and node.ops and \
+                all(isinstance(op, (ast.In, ast.NotIn)) for op in node.ops) \
+                and isinstance(node.left, ast.Constant) \
+                and isinstance(node.left.value, str):
+            return                      # '"key" in batch' — structural, the
+                                        # pytree's key set is static
+        if isinstance(node, ast.Call):
+            ch = dotted_chain(node.func)
+            if ch and ch[-1] in STATIC_CALLS:
+                return                  # len(x), isinstance(x, T), ...
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                and node.id in tainted:
+            found.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+
+    walk(expr)
+    return found
+
+
+def taint_of(fn_node: ast.AST, tainted0: Optional[Set[str]] = None,
+             exclude: Set[str] = frozenset()) -> Set[str]:
+    """Names holding (things derived from) the function's parameters.
+    ``exclude``: params that are static at trace time (static_argnames)."""
+    tainted = (set(tainted0 or ()) | _param_names(fn_node)) - set(exclude)
+    changed = True
+    while changed:
+        changed = False
+        for node in body_stmts(fn_node):
+            value = None
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = node.value
+            elif isinstance(node, ast.For):
+                value = node.iter
+            if value is None:
+                continue
+            if hot_names(value, tainted):
+                for name in _assign_targets(node):
+                    if name not in tainted:
+                        tainted.add(name)
+                        changed = True
+    return tainted
+
+
+# ---------------------------------------------------------------------------
+# the rules
+
+@rule("TRACER-BRANCH",
+      "Python if/while/assert on a traced value inside a jit/scan context")
+def _tracer_branch(ctx: ModuleContext) -> Iterator[Finding]:
+    for fi in ctx.traced_funcs():
+        tainted = taint_of(fi.node, exclude=fi.static_params)
+        for node in body_stmts(fi.node):
+            if isinstance(node, (ast.If, ast.While, ast.Assert)):
+                test, what = node.test, type(node).__name__.lower()
+            elif isinstance(node, ast.IfExp):
+                test, what = node.test, "conditional expression"
+            else:
+                continue
+            hot = hot_names(test, tainted)
+            if hot:
+                yield ctx.finding(
+                    "TRACER-BRANCH", node,
+                    f"Python {what} on traced value(s) "
+                    f"{sorted(hot)} inside traced function "
+                    f"'{fi.qualname}' — this raises a "
+                    f"ConcretizationTypeError under jit (or silently "
+                    f"freezes the branch at trace time); use jnp.where / "
+                    f"lax.cond / lax.while_loop")
+
+
+_SYNC_ATTRS = {"item", "tolist", "block_until_ready"}
+_SYNC_LOOP_CALLS = {"block_until_ready", "device_get", "item"}
+
+
+@rule("HOST-SYNC",
+      "host synchronization (float()/.item()/np.asarray/device_get) on "
+      "device values in a traced function or a hot host loop")
+def _host_sync(ctx: ModuleContext) -> Iterator[Finding]:
+    # pattern A: concretizing calls on tainted values inside traced functions
+    for fi in ctx.traced_funcs():
+        tainted = taint_of(fi.node, exclude=fi.static_params)
+        for node in body_stmts(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            ch = dotted_chain(node.func)
+            hot: Set[str] = set()
+            kind = None
+            if ch and len(ch) == 1 and ch[0] in ("float", "int", "bool",
+                                                 "complex"):
+                for a in node.args:
+                    hot |= hot_names(a, tainted)
+                kind = f"{ch[0]}()"
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _SYNC_ATTRS:
+                hot = hot_names(node.func.value, tainted)
+                kind = f".{node.func.attr}()"
+            elif ch and len(ch) >= 2 and ch[-1] in ("asarray", "array") \
+                    and ctx.module_aliases.get(ch[0]) == "numpy":
+                for a in node.args:
+                    hot |= hot_names(a, tainted)
+                kind = f"{'.'.join(ch)}()"
+            if hot and kind:
+                yield ctx.finding(
+                    "HOST-SYNC", node,
+                    f"{kind} on traced value(s) {sorted(hot)} inside "
+                    f"traced function '{fi.qualname}' — forces a device→"
+                    f"host sync (or a trace-time concretization error); "
+                    f"keep the value on device or move it out of the "
+                    f"traced region")
+    # pattern B: explicit syncs lexically inside host-side loops
+    loop_of: Dict[int, ast.AST] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.For, ast.While)):
+            for sub in ast.walk(node):
+                loop_of.setdefault(id(sub), node)
+    for node in ast.walk(ctx.tree):
+        if id(node) not in loop_of or not isinstance(node, ast.Call):
+            continue
+        fi = ctx.func_of(node)
+        if fi is not None and fi.traced:
+            continue                     # pattern A's jurisdiction
+        ch = dotted_chain(node.func)
+        name = ch[-1] if ch else (node.func.attr
+                                  if isinstance(node.func, ast.Attribute)
+                                  else None)
+        if name in _SYNC_LOOP_CALLS:
+            yield ctx.finding(
+                "HOST-SYNC", node,
+                f"{name}() inside a host-side loop — a per-iteration "
+                f"device sync serializes dispatch (the per-update float(v) "
+                f"bug class); batch the fetch outside the loop")
+
+
+@rule("BLOCKING-NO-TIMEOUT",
+      "blocking queue/thread call without a timeout in threaded code")
+def _blocking_no_timeout(ctx: ModuleContext) -> Iterator[Finding]:
+    if not ctx.has_threading_imports:
+        return
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        attr = node.func.attr
+        kwnames = {kw.arg for kw in node.keywords}
+        if "timeout" in kwnames:
+            continue
+        blocking = False
+        if attr == "get" and not node.args:
+            # Queue.get() — dict.get always takes >= 1 positional arg
+            blocking = not any(kw.arg == "block" and
+                               isinstance(kw.value, ast.Constant) and
+                               kw.value.value is False
+                               for kw in node.keywords)
+        elif attr == "join" and not node.args:
+            # Thread/Process.join() — str.join always takes an argument
+            blocking = True
+        elif attr in ("recv", "result") and not node.args:
+            blocking = True
+        elif attr in ("acquire", "wait") and not node.args:
+            blocking = not any(kw.arg == "blocking" and
+                               isinstance(kw.value, ast.Constant) and
+                               kw.value.value is False
+                               for kw in node.keywords)
+        if blocking:
+            yield ctx.finding(
+                "BLOCKING-NO-TIMEOUT", node,
+                f".{attr}() without a timeout in a module that uses "
+                f"threads/queues — a dead or wedged peer turns this into "
+                f"a silent deadlock; pass timeout= (poll in a loop if "
+                f"cancellation must be honored)")
+
+
+@rule("NONDET-IN-PURE",
+      "nondeterministic host call (time/random/np.random) reachable from a "
+      "traced function")
+def _nondet_in_pure(ctx: ModuleContext) -> Iterator[Finding]:
+    for fi in ctx.traced_funcs():
+        for node in body_stmts(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            ch = dotted_chain(node.func)
+            if len(ch) < 2:
+                continue
+            root_mod = ctx.module_aliases.get(ch[0])
+            bad = None
+            if root_mod in _NONDET_ROOTS:
+                bad = f"{root_mod}.{'.'.join(ch[1:])}"
+            elif root_mod == "numpy" and ch[1] == "random":
+                bad = f"numpy.{'.'.join(ch[1:])}"
+            elif ch[0] in _NONDET_ROOTS and root_mod is None and \
+                    ctx.from_imports.get(ch[0], "").startswith(tuple(
+                        _NONDET_ROOTS)):
+                bad = ".".join(ch)
+            if bad:
+                yield ctx.finding(
+                    "NONDET-IN-PURE", node,
+                    f"{bad}() inside traced function '{fi.qualname}' "
+                    f"({fi.trace_reason}) — the value freezes at trace "
+                    f"time and silently replays on every call; thread a "
+                    f"jax.random key (or pass the value in as an argument)")
+
+
+@rule("DONATION-REUSE",
+      "a buffer donated via donate_argnums is read after the donating call")
+def _donation_reuse(ctx: ModuleContext) -> Iterator[Finding]:
+    for fi in list(ctx.funcs.values()) + [None]:
+        # also scan module level (fi None)
+        nodes = (body_stmts(fi.node) if fi is not None
+                 else (n for n in ast.walk(ctx.tree)
+                       if ctx.func_of(n) is None))
+        nodes = list(nodes)
+        donators: Dict[str, Tuple[int, ...]] = {}
+        assigns: Dict[str, List[int]] = {}
+        loads: Dict[str, List[ast.Name]] = {}
+        donated: List[Tuple[str, int]] = []   # (name, donating call lineno)
+
+        def parse_donate(call: ast.Call) -> Optional[Tuple[int, ...]]:
+            ch = dotted_chain(call.func)
+            if not (ch and ch[-1] == "jit"):
+                return None
+            for kw in call.keywords:
+                if kw.arg in ("donate_argnums", "donate_argnames"):
+                    v = kw.value
+                    if isinstance(v, ast.Constant) and \
+                            isinstance(v.value, int):
+                        return (v.value,)
+                    if isinstance(v, (ast.Tuple, ast.List)):
+                        out = tuple(e.value for e in v.elts
+                                    if isinstance(e, ast.Constant)
+                                    and isinstance(e.value, int))
+                        return out or None
+            return None
+
+        # pass 1: names, assignments, and which locals hold donating jits
+        for node in nodes:
+            if isinstance(node, ast.Name):
+                if isinstance(node.ctx, ast.Load):
+                    loads.setdefault(node.id, []).append(node)
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign,
+                                 ast.For)):
+                for t in _assign_targets(node):
+                    assigns.setdefault(t, []).append(node.lineno)
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call):
+                pos = parse_donate(node.value)
+                if pos:
+                    for t in _assign_targets(node):
+                        donators[t] = pos
+        # pass 2: donating call sites (body_stmts order is not source order,
+        # so the donator table must be complete before this pass)
+        for node in nodes:
+            if not isinstance(node, ast.Call):
+                continue
+            pos = None
+            if isinstance(node.func, ast.Name) and node.func.id in donators:
+                pos = donators[node.func.id]
+            elif isinstance(node.func, ast.Call):
+                pos = parse_donate(node.func)
+            if pos:
+                for p in pos:
+                    if p < len(node.args) and \
+                            isinstance(node.args[p], ast.Name):
+                        donated.append((node.args[p].id, node.lineno))
+
+        for name, call_line in donated:
+            relivened = [a for a in assigns.get(name, [])
+                         if a >= call_line]
+            for load in loads.get(name, []):
+                if load.lineno <= call_line:
+                    continue
+                if any(call_line <= a <= load.lineno for a in relivened):
+                    continue
+                where = fi.qualname if fi is not None else "<module>"
+                yield ctx.finding(
+                    "DONATION-REUSE", load,
+                    f"'{name}' was donated to a jitted call at line "
+                    f"{call_line} (donate_argnums) and read again here in "
+                    f"'{where}' — the buffer may already be aliased into "
+                    f"the output; rebind the result or drop the donation")
+                break
+
+
+@rule("IMPURE-IMPORT",
+      "host numpy ops inside a function traced by jax.jit/lax.scan")
+def _impure_import(ctx: ModuleContext) -> Iterator[Finding]:
+    np_aliases = {alias for alias, mod in ctx.module_aliases.items()
+                  if mod == "numpy"}
+    if not np_aliases:
+        return
+    for fi in ctx.traced_funcs():
+        for node in body_stmts(fi.node):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            ch = dotted_chain(node.func)
+            if not (len(ch) >= 2 and ch[0] in np_aliases):
+                continue
+            if ch[1] in _NUMPY_OK or ch[1] == "random":
+                continue                 # dtypes/constants OK; np.random is
+                                         # NONDET-IN-PURE's finding
+            yield ctx.finding(
+                "IMPURE-IMPORT", node,
+                f"numpy op {'.'.join(ch)}() inside traced function "
+                f"'{fi.qualname}' — host numpy under trace concretizes "
+                f"tracers (or bakes in constants) instead of staying in "
+                f"the XLA program; use jax.numpy")

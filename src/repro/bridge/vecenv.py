@@ -23,9 +23,10 @@ from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.configs.base import TrainConfig
 from repro.core import emulation as em
 from repro.core import spaces as sp
-from repro.core.host import HostPool
+from repro.core.host import HostPool, _UNSET
 from repro.bridge import adapters as ad
 
 
@@ -44,7 +45,8 @@ class HostVecEnv:
                  *, seed: int = 0, obs_spec: em.FlatSpec,
                  act_spec: em.ActionSpec, single_observation_space: sp.Space,
                  single_action_space: sp.Space, num_agents: int = 1,
-                 horizon: Optional[int] = None):
+                 horizon: Optional[int] = None,
+                 recv_timeout: Optional[float] = None):
         self.num_envs = len(env_fns)            # M simulated envs
         self.batch_envs = int(batch_size)       # N envs per batch
         self.num_agents = int(num_agents)
@@ -59,7 +61,8 @@ class HostVecEnv:
                              if act_spec.kind == "discrete"
                              else sp.Box((act_spec.cont_dim,)))
         self.horizon = horizon
-        self.pool = HostPool(env_fns, batch_size=self.batch_envs, seed=seed)
+        self.pool = HostPool(env_fns, batch_size=self.batch_envs, seed=seed,
+                             recv_timeout=recv_timeout)
         self._ids = None
 
     @property
@@ -67,7 +70,10 @@ class HostVecEnv:
         return self.num_envs == self.batch_envs
 
     # -- async protocol (what the engine's host tier drives) -----------------
-    def recv(self, timeout: Optional[float] = None):
+    def recv(self, timeout=_UNSET):
+        """Defaults to the pool's ``recv_timeout``; ``timeout=None`` is an
+        explicit wait-forever opt-in (a hung env then deadlocks the loop —
+        prefer a finite timeout, which raises ``TimeoutError``)."""
         obs, rew, done, info, ids = self.pool.recv(timeout=timeout)
         A = self.num_agents
         obs = np.asarray(obs, np.float32).reshape(len(ids) * A, self.obs_dim)
@@ -86,13 +92,13 @@ class HostVecEnv:
         self.pool.send(actions, env_ids)
 
     # -- sync convenience (tests, conformance, sync baselines) ---------------
-    def reset(self, timeout: Optional[float] = None):
+    def reset(self, timeout=_UNSET):
         """First observations (construction already queued the resets)."""
         assert self._ids is None, "reset() after stepping; build a fresh env"
         obs, _rew, _done, _info, self._ids = self.recv(timeout=timeout)
         return obs
 
-    def step(self, actions, timeout: Optional[float] = None):
+    def step(self, actions, timeout=_UNSET):
         """``send`` for the last received rows, then ``recv`` the next batch
         (identical to the classic VecEnv step in sync mode)."""
         assert self._ids is not None, "call reset() before step()"
@@ -111,7 +117,9 @@ class HostVecEnv:
 def wrap(env_fn: Union[Callable, object], num_envs: int = 1,
          batch_size: Optional[int] = None, *, seed: int = 0,
          api: Optional[str] = None, pad_to: Optional[int] = None,
-         horizon: Optional[int] = None) -> HostVecEnv:
+         horizon: Optional[int] = None,
+         recv_timeout: Optional[float] = TrainConfig.host_recv_timeout
+         ) -> HostVecEnv:
     """One-line wrapper: any host env factory → a trainable ``HostVecEnv``.
 
         venv = bridge.wrap(lambda: MyGymEnv(), num_envs=8)
@@ -124,6 +132,9 @@ def wrap(env_fn: Union[Callable, object], num_envs: int = 1,
     double-buffered async pool. ``pad_to`` — pad pettingzoo agent rows to a
     fixed larger count; ``horizon`` — declared episode bound (defaults to
     the env's ``horizon`` attribute), used by the conformance host profile.
+    ``recv_timeout`` — default bound on every ``recv``/``reset``/``step``
+    wait (``TrainConfig.host_recv_timeout``, 60 s): a hung host env raises
+    ``TimeoutError`` instead of deadlocking; ``None`` waits forever.
     """
     if callable(env_fn):
         probe = env_fn()
@@ -159,7 +170,8 @@ def wrap(env_fn: Union[Callable, object], num_envs: int = 1,
         single_observation_space=obs_space, single_action_space=act_space,
         num_agents=num_agents,
         horizon=horizon if horizon is not None
-        else getattr(probe, "horizon", None))
+        else getattr(probe, "horizon", None),
+        recv_timeout=recv_timeout)
 
 
 def make_host_engine(env_fn, tcfg, *, hidden: int = 64,
@@ -180,7 +192,7 @@ def make_host_engine(env_fn, tcfg, *, hidden: int = 64,
     N = tcfg.num_envs
     M = num_envs or tcfg.pool_buffers * N
     hv = wrap(env_fn, num_envs=M, batch_size=N, seed=seed, api=api,
-              pad_to=pad_to)
+              pad_to=pad_to, recv_timeout=tcfg.host_recv_timeout)
     if hv.act_spec.kind == "discrete":
         dist = Dist("categorical", nvec=hv.act_spec.nvec)
     else:

@@ -65,6 +65,11 @@ class _WorkerFailure:
         self.env_index, self.op, self.exc = env_index, op, exc
 
 
+# "no timeout argument given" marker: distinguishes recv() (use the pool's
+# default) from recv(timeout=None) (explicitly wait forever)
+_UNSET = object()
+
+
 class HostPool:
     """EnvPool semantics over host envs.
 
@@ -82,11 +87,13 @@ class HostPool:
     """
 
     def __init__(self, env_fns: Sequence[Callable[[], HostEnv]],
-                 batch_size: int, seed: int = 0):
+                 batch_size: int, seed: int = 0,
+                 recv_timeout: float = None):
         self.M = len(env_fns)
         self.N = batch_size
         assert 1 <= self.N <= self.M
         self.seed = seed
+        self.recv_timeout = recv_timeout
         self._envs: List[HostEnv] = [fn() for fn in env_fns]
         self._ready: "queue.Queue" = queue.Queue()
         self._threads: List[threading.Thread] = []
@@ -111,7 +118,13 @@ class HostPool:
         op = "reset"
         try:
             while not self._stop:
-                cmd, arg = self._inboxes[i].get()
+                try:
+                    # poll, don't park: an untimed get() here kept the
+                    # worker alive forever when the close sentinel was
+                    # dropped (full inbox) — _stop must win on its own
+                    cmd, arg = self._inboxes[i].get(timeout=0.05)
+                except queue.Empty:
+                    continue
                 if cmd == "close" or self._stop:
                     return
                 if cmd == "reset":
@@ -131,18 +144,23 @@ class HostPool:
         except Exception as e:   # noqa: BLE001 — forwarded, never swallowed
             self._ready.put(_WorkerFailure(i, op, e))
 
-    def recv(self, timeout: float = None):
+    def recv(self, timeout: float = _UNSET):
         """Block until the N first-finished envs have observations.
 
         Raises ``HostEnvError`` if any of those envs crashed, and
         ``TimeoutError`` if fewer than N envs produce a result within
-        ``timeout`` seconds (None ⇒ wait forever)."""
+        ``timeout`` seconds. Defaults to the pool's ``recv_timeout``
+        (constructor arg); pass ``timeout=None`` to explicitly opt into
+        waiting forever."""
+        if timeout is _UNSET:
+            timeout = self.recv_timeout
         deadline = None if timeout is None else time.monotonic() + timeout
         items = []
         for _ in range(self.N):
             try:
                 if deadline is None:
-                    it = self._ready.get()
+                    # explicit timeout=None is a deliberate wait-forever
+                    it = self._ready.get()  # repro: noqa[BLOCKING-NO-TIMEOUT]
                 else:
                     remaining = deadline - time.monotonic()
                     if remaining <= 0:

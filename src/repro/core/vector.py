@@ -184,12 +184,12 @@ def autotune(env, num_envs: int, steps: int = 64, key=None):
             jnp.int32)
         # warmup (compile)
         state, obs, *_ = vec.step(state, zero_action, key)
-        jax.block_until_ready(obs)
+        jax.block_until_ready(obs)  # repro: noqa[HOST-SYNC] — autotune warmup barrier: the sync IS the measurement boundary
         t0 = time.perf_counter()
         for i in range(steps):
             state, obs, *_ = vec.step(state, zero_action,
                                       jax.random.fold_in(key, i))
-        jax.block_until_ready(obs)
+        jax.block_until_ready(obs)  # repro: noqa[HOST-SYNC] — autotune timing barrier (deliberate)
         dt = time.perf_counter() - t0
         results[backend] = steps * vec.batch_size / dt
     best = max(results, key=results.get)

@@ -91,7 +91,9 @@ class ResilientLoop:
             t0 = time.perf_counter()
             try:
                 state, metrics = self.step_fn(state, pending)
-                jax.block_until_ready(jax.tree.leaves(metrics)[0])
+                # the sync is the failure detector: a device error only
+                # surfaces when the step's result is materialized
+                jax.block_until_ready(jax.tree.leaves(metrics)[0])  # repro: noqa[HOST-SYNC]
             except Exception as e:   # device failure / preemption
                 retries += 1
                 self.recoveries += 1

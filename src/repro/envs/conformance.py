@@ -58,6 +58,11 @@ class CheckResult:
 class ConformanceReport:
     env_name: str
     results: list = field(default_factory=list)
+    # informational cross-link to the zero-execution layer: repro.analysis
+    # lint findings in the env's source (never affects ``ok`` — the runtime
+    # checks are the verdict; this tells you what a static pass would have
+    # caught before ever stepping the env)
+    static_findings: tuple = ()
 
     @property
     def ok(self) -> bool:
@@ -74,6 +79,12 @@ class ConformanceReport:
             lines.append(f"  [{'pass' if r.ok else 'FAIL'}] {r.name}")
             for v in r.violations:
                 lines.append(f"         - {v}")
+        if self.static_findings:
+            lines.append(f"  static analysis (informational, "
+                         f"{len(self.static_findings)} finding(s) — "
+                         f"see `python -m repro.analysis`):")
+            for f in self.static_findings:
+                lines.append(f"         - {f.render()}")
         return "\n".join(lines)
 
     __str__ = summary
@@ -106,31 +117,13 @@ def _trees_equal(a, b) -> bool:
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
-_CALLBACK_PRIMS = ("pure_callback", "io_callback", "python_callback",
-                   "callback", "debug_callback")
-
-
 def _callback_eqns(jaxpr, found=None):
-    """Recursively collect host-callback primitives in a (closed) jaxpr.
-    Sub-jaxprs hide in params as ClosedJaxpr/Jaxpr values AND in tuples of
-    them (lax.cond's ``branches``), so walk both."""
+    """Host-callback primitive names in a (closed) jaxpr — delegates to the
+    shared scanner in ``repro.analysis`` (one callback definition for the
+    static audit and the runtime conformance check)."""
+    from repro.analysis import callback_eqns
     found = [] if found is None else found
-
-    def visit(v):
-        inner = getattr(v, "jaxpr", None)     # ClosedJaxpr → Jaxpr
-        if inner is not None:
-            _callback_eqns(inner, found)
-        elif hasattr(v, "eqns"):              # bare Jaxpr
-            _callback_eqns(v, found)
-        elif isinstance(v, (tuple, list)):
-            for x in v:
-                visit(x)
-
-    for eqn in jaxpr.eqns:
-        if any(c in eqn.primitive.name for c in _CALLBACK_PRIMS):
-            found.append(eqn.primitive.name)
-        for v in eqn.params.values():
-            visit(v)
+    found.extend(name for name, _eqn in callback_eqns(jaxpr))
     return found
 
 
@@ -460,7 +453,23 @@ def check_env(env_or_name, *, seed: int = 0,
             violations = [f"check raised {type(e).__name__}: {e}"]
         report.results.append(
             CheckResult(cname, not violations, tuple(violations)))
+    report.static_findings = _static_findings(type(env))
     return report
+
+
+def _static_findings(cls) -> tuple:
+    """Lint the env class's source with ``repro.analysis`` and keep the
+    findings inside the class body — the static half of the report."""
+    import inspect
+    try:
+        from repro.analysis import check_source
+        path = inspect.getsourcefile(cls)
+        body, start = inspect.getsourcelines(cls)
+        src = open(path).read()
+    except (TypeError, OSError, ImportError):   # builtins, REPL classes, …
+        return ()
+    return tuple(f for f in check_source(src, path)
+                 if start <= f.line < start + len(body))
 
 
 # ---------------------------------------------------------------------------

@@ -203,12 +203,12 @@ def autotune(op: str, *args, impls: tuple = None, iters: int = 3,
         fn = _REGISTRY[op][name].fn
         try:
             for _ in range(warmup):
-                jax.block_until_ready(fn(*args, **kwargs))
+                jax.block_until_ready(fn(*args, **kwargs))  # repro: noqa[HOST-SYNC] — autotune warmup (deliberate sync)
             t0 = time.perf_counter()
             out = None
             for _ in range(iters):
                 out = fn(*args, **kwargs)
-            jax.block_until_ready(out)
+            jax.block_until_ready(out)  # repro: noqa[HOST-SYNC] — autotune timing barrier (deliberate)
             results[name] = iters / (time.perf_counter() - t0)
         except Exception:
             continue

@@ -123,6 +123,48 @@ def parse(text: str) -> Module:
     return Module(comps, entry)
 
 
+_ALIAS_ENTRY = re.compile(
+    r"\{\s*([\d,\s]*)\}\s*:\s*\((\d+)\s*,\s*\{([\d,\s]*)\}\s*,\s*"
+    r"(may-alias|must-alias)\s*\)")
+
+
+def input_output_aliases(text: str) -> Dict[Tuple[int, ...],
+                                            Tuple[int, Tuple[int, ...], str]]:
+    """Parse the module header's ``input_output_alias={ {0}: (1, {},
+    may-alias), ... }`` — the buffer-donation record XLA writes into
+    post-optimization HLO. Returns {output_index: (param_number,
+    param_index, kind)}. Empty dict → no donation was consumed."""
+    key = "input_output_alias="
+    start = text.find(key)
+    if start < 0:
+        return {}
+    i = text.find("{", start)
+    if i < 0:
+        return {}
+    depth, j = 0, i
+    while j < len(text):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    body = text[i + 1:j]
+    out: Dict[Tuple[int, ...], Tuple[int, Tuple[int, ...], str]] = {}
+    for m in _ALIAS_ENTRY.finditer(body):
+        out_idx = tuple(int(x) for x in m.group(1).split(",") if x.strip())
+        pidx = tuple(int(x) for x in m.group(3).split(",") if x.strip())
+        out[out_idx] = (int(m.group(2)), pidx, m.group(4))
+    return out
+
+
+def donated_params(text: str) -> set:
+    """Flat entry-parameter numbers whose buffers are aliased into the
+    output — i.e. donations XLA actually consumed."""
+    return {param for param, _idx, _kind in input_output_aliases(text).values()}
+
+
 def _dot_flops(inst: Inst, comp: Computation) -> float:
     out = 1
     for d in inst.dims:

@@ -74,7 +74,7 @@ class Arena:
 
         def act(params, obs, carry, reset, key, random):
             logits, _, pc = policy.step(params, obs, carry, reset=reset)
-            if random:
+            if random:  # repro: noqa[TRACER-BRANCH] — random is a Python bool bound per program (random_b closure / literal False)
                 logits = jnp.zeros_like(logits)
             return dist.sample(key, logits), pc
 

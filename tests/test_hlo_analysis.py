@@ -103,3 +103,49 @@ ENTRY %main (a: f32[4,4]) -> (s32[], /*index=1*/f32[4,4]) {
     from repro.launch.hlo_analysis import analyze
     an = analyze(text, 1)
     assert an["flops"] == 9 * 2 * 4 * 4 * 4, an["flops"]
+    # byte traffic is trip-weighted too: 96 B of dot traffic per iteration
+    # (tuple plumbing fuses away), times the 9 loop trips
+    assert an["bytes"] == 9 * 96, an["bytes"]
+
+
+def test_input_output_alias_header_parsing():
+    from repro.launch.hlo_analysis import donated_params, input_output_aliases
+    text = ("HloModule jit_step, is_scheduled=true, "
+            "input_output_alias={ {0}: (0, {}, may-alias), "
+            "{1}: (3, {}, must-alias), {2, 0}: (5, {1}, may-alias) }, "
+            "entry_computation_layout={(f32[8]{0})->f32[8]{0}}\n\n"
+            "ENTRY %main () -> f32[] {\n"
+            "  ROOT %c = f32[] constant(0)\n"
+            "}\n")
+    aliases = input_output_aliases(text)
+    assert aliases[(0,)] == (0, (), "may-alias")
+    assert aliases[(1,)] == (3, (), "must-alias")
+    assert aliases[(2, 0)] == (5, (1,), "may-alias")
+    assert donated_params(text) == {0, 3, 5}
+
+
+def test_input_output_alias_absent():
+    from repro.launch.hlo_analysis import donated_params, input_output_aliases
+    text = "HloModule plain\n\nENTRY %m () -> f32[] { ROOT %c = f32[] constant(0) }\n"
+    assert input_output_aliases(text) == {}
+    assert donated_params(text) == set()
+
+
+def test_donated_params_on_real_compiled_module():
+    """XLA's own post-optimization text must satisfy the parser: a donated
+    elementwise update aliases param 0, a donated reduction aliases nothing."""
+    import jax
+    import jax.numpy as jnp
+    import warnings
+    from repro.launch.hlo_analysis import donated_params
+
+    x = jnp.ones((64,), jnp.float32)
+    hlo = jax.jit(lambda a: a + 1.0,
+                  donate_argnums=(0,)).lower(x).compile().as_text()
+    assert 0 in donated_params(hlo)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")     # XLA warns: donation unused
+        hlo = jax.jit(lambda a: jnp.sum(a),
+                      donate_argnums=(0,)).lower(x).compile().as_text()
+    assert 0 not in donated_params(hlo)
