@@ -40,6 +40,11 @@ class JitteredGymEnv:
 
     def reset(self, *, seed=None, options=None):
         time.sleep(self.reset_ms / 1e3)         # slow resets (Crafter-shaped)
+        if seed is not None:
+            # derive the latency stream from the pool's per-env reset seed:
+            # distinct streams per env under BOTH backends (a constructor
+            # seed can't vary per worker once factories are pickled)
+            self.rng = np.random.RandomState(int(seed) % (2 ** 32))
         self.t = 0
         return np.zeros(8, np.float32), {}
 
@@ -54,15 +59,15 @@ class JitteredGymEnv:
 
 
 def run_once(M: int, N: int, steps: int = 200, seed: int = 0,
-             policy_latency_ms: float = 1.5) -> float:
-    """SPS of a recv→policy→send loop over the bridged jittered env."""
-    import itertools
+             policy_latency_ms: float = 1.5,
+             backend: str = "thread") -> float:
+    """SPS of a recv→policy→send loop over the bridged jittered env.
+    Per-env latency streams stay distinct (a shared stream would phase-lock
+    the envs and understate the straggler variance the pool exploits): each
+    env reseeds from the pool's ``seed + i`` reset seed."""
     from repro.bridge import wrap
-    # distinct per-env latency streams (a shared seed would phase-lock the
-    # envs and understate the straggler variance the pool exploits)
-    counter = itertools.count(seed)
-    venv = wrap(lambda: JitteredGymEnv(seed=next(counter)), num_envs=M,
-                batch_size=N, seed=seed)
+    venv = wrap(JitteredGymEnv, num_envs=M,
+                batch_size=N, seed=seed, backend=backend)
     try:
         obs, _rew, _done, _info, ids = venv.recv(timeout=60)
         t0 = time.perf_counter()
@@ -105,14 +110,19 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer timed steps (CI smoke)")
+    ap.add_argument("--backend", default="thread",
+                    choices=("thread", "proc"),
+                    help="HostPool worker backend for the vecenv cells "
+                         "(thread-vs-proc head-to-head lives in "
+                         "bench_hostpool.py)")
     ap.add_argument("--out", default="BENCH_bridge.json")
     args = ap.parse_args(argv)
 
     N = 8
     steps = 120 if args.quick else 300
-    sync = run_once(M=N, N=N, steps=steps)
-    async2 = run_once(M=2 * N, N=N, steps=steps)
-    async4 = run_once(M=4 * N, N=N, steps=steps)
+    sync = run_once(M=N, N=N, steps=steps, backend=args.backend)
+    async2 = run_once(M=2 * N, N=N, steps=steps, backend=args.backend)
+    async4 = run_once(M=4 * N, N=N, steps=steps, backend=args.backend)
     gain2 = async2 / sync
     print(f"bench_bridge/vecenv,{1e6 / async2:.1f},sync_sps={sync:.0f};"
           f"async2_sps={async2:.0f};async4_sps={async4:.0f};"
@@ -133,7 +143,7 @@ def main(argv=None):
 
     out = {
         "meta": {"batch_envs": N, "steps": steps, "engine_updates": upd,
-                 "quick": bool(args.quick),
+                 "quick": bool(args.quick), "backend": args.backend,
                  "jitter": {"vecenv_mean_ms": 2.0, "vecenv_sigma": 0.6,
                             "policy_latency_ms": 1.5}},
         "vecenv": {"sync_sps": round(sync, 1),

@@ -286,8 +286,12 @@ def build_context(tree: ast.Module, source: str, path: str) -> ModuleContext:
         elif isinstance(node, ast.ImportFrom) and node.module:
             for al in node.names:
                 ctx.from_imports[al.asname or al.name] = node.module
-    mods = set(ctx.module_aliases.values()) | {
-        m.split(".")[0] for m in ctx.from_imports.values()}
+    # root-normalize both alias targets and from-sources: `import
+    # multiprocessing.shared_memory` stores the full dotted name as the
+    # alias value, which would otherwise slip past the root-level gate set
+    mods = ({m.split(".")[0] for m in ctx.module_aliases.values()}
+            | set(ctx.module_aliases.values())
+            | {m.split(".")[0] for m in ctx.from_imports.values()})
     ctx.has_threading_imports = bool(mods & _BLOCKING_GATE_IMPORTS)
 
     defs_by_name: Dict[str, List[FuncInfo]] = {}
@@ -551,13 +555,25 @@ def _blocking_no_timeout(ctx: ModuleContext) -> Iterator[Finding]:
     if not ctx.has_threading_imports:
         return
     for node in ast.walk(ctx.tree):
-        if not (isinstance(node, ast.Call)
-                and isinstance(node.func, ast.Attribute)):
+        if not isinstance(node, ast.Call):
             continue
-        attr = node.func.attr
         kwnames = {kw.arg for kw in node.keywords}
         if "timeout" in kwnames:
             continue
+        # bare `wait(object_list)` from-imported from
+        # multiprocessing.connection — blocks until a connection is ready
+        if (isinstance(node.func, ast.Name) and node.func.id == "wait"
+                and node.args
+                and ctx.from_imports.get("wait", "").endswith("connection")):
+            yield ctx.finding(
+                "BLOCKING-NO-TIMEOUT", node,
+                "connection.wait(objects) without a timeout — a dead or "
+                "wedged peer turns this into a silent deadlock; pass "
+                "timeout= (poll in a loop if cancellation must be honored)")
+            continue
+        if not isinstance(node.func, ast.Attribute):
+            continue
+        attr = node.func.attr
         blocking = False
         if attr == "get" and not node.args:
             # Queue.get() — dict.get always takes >= 1 positional arg
@@ -575,6 +591,11 @@ def _blocking_no_timeout(ctx: ModuleContext) -> Iterator[Finding]:
                                isinstance(kw.value, ast.Constant) and
                                kw.value.value is False
                                for kw in node.keywords)
+        elif attr == "wait" and node.args:
+            # connection.wait(object_list): the positional arg is the
+            # object list, not a timeout (unlike Event.wait(t))
+            ch = dotted_chain(node.func)
+            blocking = len(ch) >= 2 and ch[-2] == "connection"
         if blocking:
             yield ctx.finding(
                 "BLOCKING-NO-TIMEOUT", node,

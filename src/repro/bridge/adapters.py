@@ -16,19 +16,26 @@ the normalization layer that makes it true for host (stateful Python) envs:
   * ``np_emulate_obs`` / ``np_unemulate_action`` are numpy twins of
     ``emulation.emulate`` / ``unemulate_action`` driven by the *same*
     ``FlatSpec`` / ``ActionSpec`` layouts — packing happens on the worker
-    thread, off the device, but byte-for-byte where the model expects it.
+    (thread or process), off the device, but byte-for-byte where the model
+    expects it.
   * the three ``*Adapter`` classes present every style as the minimal host
     protocol ``core/host.py`` speaks: ``reset(seed) -> obs`` and
     ``step(flat_action) -> (obs, rew, done, info)`` with flat f32
     observations and flat emulated actions.
+  * ``AdapterFactory`` is the picklable form of "build env, wrap in
+    adapter" that the ``backend="proc"`` shared-memory workers unpickle.
+
+This module must stay importable without jax (it runs inside spawn
+workers), which is why it consumes the specs from ``core.emuspec`` — the
+numpy-only half of the emulation machinery.
 """
 from __future__ import annotations
 
-from typing import Any, Mapping
+from typing import Any, Callable, Mapping, Optional
 
 import numpy as np
 
-from repro.core import emulation as em
+from repro.core import emuspec as em
 from repro.core import spaces as sp
 
 APIS = ("gymnasium", "pettingzoo", "duck")
@@ -258,3 +265,28 @@ ADAPTERS = {
     "gymnasium": GymnasiumAdapter,
     "pettingzoo": PettingZooAdapter,
 }
+
+
+class AdapterFactory:
+    """Picklable "build env, wrap in the right adapter" closure substitute.
+
+    The proc backend ships env factories into spawn workers with plain
+    pickle, so they cannot be lambdas/closures. This object carries the api
+    *name* plus the (picklable) emulation specs and the user's env factory;
+    calling it inside the worker constructs the env and wraps it. Also works
+    under ``backend="thread"``, where picklability is simply unused."""
+
+    def __init__(self, api: str, env_fn: Callable, obs_spec: em.FlatSpec,
+                 act_spec: em.ActionSpec, num_agents: Optional[int] = None):
+        assert api in ADAPTERS, api
+        self.api = api
+        self.env_fn = env_fn
+        self.obs_spec = obs_spec
+        self.act_spec = act_spec
+        self.num_agents = num_agents
+
+    def __call__(self):
+        kw = {} if self.num_agents is None else {"num_agents":
+                                                 self.num_agents}
+        return ADAPTERS[self.api](self.env_fn(), self.obs_spec,
+                                  self.act_spec, **kw)

@@ -24,7 +24,8 @@ from typing import Callable, Optional, Sequence, Union
 import numpy as np
 
 from repro.configs.base import TrainConfig
-from repro.core import emulation as em
+from repro.core import emuspec as em
+from repro.core import shm as _shm
 from repro.core import spaces as sp
 from repro.core.host import HostPool, _UNSET
 from repro.bridge import adapters as ad
@@ -46,7 +47,9 @@ class HostVecEnv:
                  act_spec: em.ActionSpec, single_observation_space: sp.Space,
                  single_action_space: sp.Space, num_agents: int = 1,
                  horizon: Optional[int] = None,
-                 recv_timeout: Optional[float] = None):
+                 recv_timeout: Optional[float] = None,
+                 backend: str = "thread",
+                 spin: Optional["_shm.SpinConfig"] = None):
         self.num_envs = len(env_fns)            # M simulated envs
         self.batch_envs = int(batch_size)       # N envs per batch
         self.num_agents = int(num_agents)
@@ -61,8 +64,21 @@ class HostVecEnv:
                              if act_spec.kind == "discrete"
                              else sp.Box((act_spec.cont_dim,)))
         self.horizon = horizon
+        self.backend = backend
+        A = self.num_agents
+        # per-env slab rows, sized from the emulation specs (used by the
+        # proc backend; harmless metadata under threads)
+        self.slab = _shm.SlabSpec(
+            obs_shape=(A, obs_spec.total) if A > 1 else (obs_spec.total,),
+            act_shape=((A, act_spec.num_components) if A > 1
+                       else (act_spec.num_components,)),
+            act_dtype=("int32" if act_spec.kind == "discrete"
+                       else "float32"),
+            rew_shape=(A,) if A > 1 else ())
         self.pool = HostPool(env_fns, batch_size=self.batch_envs, seed=seed,
-                             recv_timeout=recv_timeout)
+                             recv_timeout=recv_timeout, backend=backend,
+                             rew_shape=self.slab.rew_shape, slab=self.slab,
+                             spin=spin)
         self._ids = None
 
     @property
@@ -118,8 +134,9 @@ def wrap(env_fn: Union[Callable, object], num_envs: int = 1,
          batch_size: Optional[int] = None, *, seed: int = 0,
          api: Optional[str] = None, pad_to: Optional[int] = None,
          horizon: Optional[int] = None,
-         recv_timeout: Optional[float] = TrainConfig.host_recv_timeout
-         ) -> HostVecEnv:
+         recv_timeout: Optional[float] = TrainConfig.host_recv_timeout,
+         backend: str = "thread",
+         spin: Optional["_shm.SpinConfig"] = None) -> HostVecEnv:
     """One-line wrapper: any host env factory → a trainable ``HostVecEnv``.
 
         venv = bridge.wrap(lambda: MyGymEnv(), num_envs=8)
@@ -135,6 +152,10 @@ def wrap(env_fn: Union[Callable, object], num_envs: int = 1,
     ``recv_timeout`` — default bound on every ``recv``/``reset``/``step``
     wait (``TrainConfig.host_recv_timeout``, 60 s): a hung host env raises
     ``TimeoutError`` instead of deadlocking; ``None`` waits forever.
+    ``backend`` — "thread" (default; GIL-releasing env steps) or "proc"
+    (spawn processes over shared-memory slabs; pure-Python env steps
+    actually parallelize). proc requires ``env_fn`` to be picklable — a
+    module-level class/function or ``functools.partial``, not a lambda.
     """
     if callable(env_fn):
         probe = env_fn()
@@ -158,12 +179,25 @@ def wrap(env_fn: Union[Callable, object], num_envs: int = 1,
         num_agents = pad_to or len(probe.possible_agents)
         kw["num_agents"] = num_agents
 
-    def make(fn=None, inst=None):
-        return adapter_cls(inst if inst is not None else fn(),
-                           obs_spec, act_spec, **kw)
+    if backend == "proc":
+        # workers rebuild envs from pickled factories; the probe instance
+        # cannot be shipped, so it is only spec metadata here
+        if env_fn is None:
+            raise ValueError("backend='proc' needs an env *factory* "
+                             "(instances cannot be shipped to workers)")
+        close = getattr(probe, "close", None)
+        if callable(close):
+            close()
+        env_fns = [ad.AdapterFactory(api, env_fn, obs_spec, act_spec,
+                                     kw.get("num_agents"))
+                   for _ in range(num_envs)]
+    else:
+        def make(fn=None, inst=None):
+            return adapter_cls(inst if inst is not None else fn(),
+                               obs_spec, act_spec, **kw)
 
-    env_fns = [lambda: make(inst=probe)]        # reuse the probe as env 0
-    env_fns += [lambda: make(fn=env_fn) for _ in range(num_envs - 1)]
+        env_fns = [lambda: make(inst=probe)]    # reuse the probe as env 0
+        env_fns += [lambda: make(fn=env_fn) for _ in range(num_envs - 1)]
     return HostVecEnv(
         env_fns, batch_size or num_envs, seed=seed,
         obs_spec=obs_spec, act_spec=act_spec,
@@ -171,19 +205,21 @@ def wrap(env_fn: Union[Callable, object], num_envs: int = 1,
         num_agents=num_agents,
         horizon=horizon if horizon is not None
         else getattr(probe, "horizon", None),
-        recv_timeout=recv_timeout)
+        recv_timeout=recv_timeout, backend=backend, spin=spin)
 
 
 def make_host_engine(env_fn, tcfg, *, hidden: int = 64,
                      recurrent: bool = False, seed: int = 0,
                      kernel_mode: Optional[str] = None,
                      num_envs: Optional[int] = None, api: Optional[str] = None,
-                     pad_to: Optional[int] = None):
+                     pad_to: Optional[int] = None,
+                     backend: Optional[str] = None):
     """Build a ``TrainEngine(backend="host")`` around a bridged env: policy
     and distribution are sized from the bridge's emulation specs exactly as
     ``Trainer`` sizes them from ``Emulated``. ``tcfg.num_envs`` is the batch
     N; M defaults to ``tcfg.pool_buffers * N`` (M = 2N ⇒ the paper's double
-    buffering). Close with ``engine.hvec.close()``."""
+    buffering). ``backend`` overrides ``tcfg.host_backend`` (worker threads
+    vs shared-memory processes). Close with ``engine.hvec.close()``."""
     import jax
     from repro.models.policy import OceanPolicy
     from repro.rl.distributions import Dist
@@ -192,7 +228,8 @@ def make_host_engine(env_fn, tcfg, *, hidden: int = 64,
     N = tcfg.num_envs
     M = num_envs or tcfg.pool_buffers * N
     hv = wrap(env_fn, num_envs=M, batch_size=N, seed=seed, api=api,
-              pad_to=pad_to, recv_timeout=tcfg.host_recv_timeout)
+              pad_to=pad_to, recv_timeout=tcfg.host_recv_timeout,
+              backend=backend or tcfg.host_backend)
     if hv.act_spec.kind == "discrete":
         dist = Dist("categorical", nvec=hv.act_spec.nvec)
     else:

@@ -181,6 +181,10 @@ class TrainConfig:
     host_recv_timeout: float = 60.0  # host tier: bound on one first-finisher
                                      # batch (turns a hung worker into an
                                      # error instead of a deadlocked run)
+    host_backend: str = "thread"     # host tier workers: "thread" (GIL-
+                                     # releasing C/sleep steps) | "proc"
+                                     # (pure-Python steps; shared-memory
+                                     # spawn processes — core/host.py)
 
     # fault tolerance
     checkpoint_every: int = 100

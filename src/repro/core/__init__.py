@@ -1,11 +1,33 @@
 # The paper's primary contribution: emulation (structured<->flat layout
 # transforms), vectorization backends, and the EnvPool-style async pool.
-from repro.core import spaces, emulation, vector, pool
-from repro.core.emulation import (Emulated, flat_spec, emulate, unemulate,
-                                  action_spec, emulate_action, unemulate_action)
-from repro.core.vector import VecEnv, autotune
-from repro.core.pool import Pool
+#
+# Submodules load lazily (PEP 562): `import repro.core.shm` from a spawned
+# shared-memory env worker must not drag in jax via this package __init__
+# (emulation/vector/pool are jax-heavy; spaces/emuspec/host/shm are
+# numpy-only). `from repro.core import emulation` etc. still work — the
+# attribute access routes through __getattr__ below.
 
-__all__ = ["spaces", "emulation", "vector", "pool", "Emulated", "flat_spec",
-           "emulate", "unemulate", "action_spec", "emulate_action",
-           "unemulate_action", "VecEnv", "autotune", "Pool"]
+_SUBMODULES = ("spaces", "emulation", "emuspec", "vector", "pool", "host",
+               "shm")
+_SYMBOLS = {
+    "Emulated": "emulation", "flat_spec": "emulation", "emulate": "emulation",
+    "unemulate": "emulation", "action_spec": "emulation",
+    "emulate_action": "emulation", "unemulate_action": "emulation",
+    "VecEnv": "vector", "autotune": "vector", "Pool": "pool",
+}
+
+__all__ = list(_SUBMODULES) + list(_SYMBOLS)
+
+
+def __getattr__(name):
+    import importlib
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.core.{name}")
+    if name in _SYMBOLS:
+        mod = importlib.import_module(f"repro.core.{_SYMBOLS[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

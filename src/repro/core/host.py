@@ -3,17 +3,30 @@
 The JAX-native pool (core/pool.py) covers pure-functional envs. Real
 deployments also wrap *host* environments (NetHack, Pokémon Red — stateful
 Python/C processes). This module reproduces the paper's mechanism for those:
-simulate M envs on worker threads, return batches of N ≪ M from the **first
+simulate M envs on workers, return batches of N ≪ M from the **first
 finishers**, so the learner never waits on stragglers and env stepping
 overlaps policy compute. M = 2N ⇒ double buffering (paper §3.3).
 
-(Threads, not processes: env steps that block in C/sleep release the GIL,
-which is also how NLE/Atari steps behave. The paper's shared-memory and
-busy-wait micro-optimizations are process-world trivia — see DESIGN.md §2.)
+Two execution backends share one protocol:
 
-Protocol guarantees (what the bridge/engine layers above rely on):
+  * ``backend="thread"`` (default) — worker threads. Right when env steps
+    block in C or sleep on I/O and therefore release the GIL (NLE/Atari-style
+    steps); cheapest startup, picklability never matters.
+  * ``backend="proc"`` — spawn worker processes over per-pool shared-memory
+    slabs (``core/shm.py``) with busy-wait ready flags, the paper's
+    multiprocessing design. Pure-Python stepping serializes on the GIL under
+    threads; processes actually parallelize it. Measured on a multicore box
+    (``benchmarks/bench_hostpool.py``, M=16 N=8, ~2 ms pure-Python step):
+    proc sustains ≥2× the thread backend's async SPS, while staying within
+    ~15% of it on GIL-releasing sleep envs (where threads are already
+    optimal). On a single-core box the gap collapses — the benchmark records
+    ``cores`` so numbers are comparable. Zero pickled bytes cross per step:
+    workers read actions from and write observations into the slab rows.
 
-  * autoreset — a worker resets its env in-thread on ``done``; the batch row
+Protocol guarantees (what the bridge/engine layers above rely on, identical
+under both backends):
+
+  * autoreset — a worker resets its env in-worker on ``done``; the batch row
     carries the *terminal* step's reward/done/info and the *next* episode's
     first observation, exactly like the JAX ``VecEnv`` autoreset path.
   * seeding — episode ``e`` of env ``i`` resets with ``seed + i + M * e``, a
@@ -23,9 +36,10 @@ Protocol guarantees (what the bridge/engine layers above rely on):
     (``score`` / ``episode_return`` / ``episode_length`` / ``valid`` with
     ``valid == done``) accumulated per env, matching ``envs/base.empty_info``.
   * crash propagation — an exception in ``reset``/``step`` is forwarded as a
-    ``HostEnvError`` raised from ``recv()`` (naming the env), never a
-    silently dead thread with ``recv()`` blocked forever; ``recv(timeout=)``
-    additionally bounds the wait on healthy-but-slow workers.
+    ``HostEnvError`` raised from ``recv()`` (naming the env and op), never a
+    silently dead worker with ``recv()`` blocked forever; ``recv(timeout=)``
+    additionally bounds the wait on healthy-but-slow workers, and ``send``
+    refuses to queue onto a dead worker instead of deadlocking.
 """
 from __future__ import annotations
 
@@ -35,6 +49,8 @@ import time
 from typing import Callable, List, Sequence
 
 import numpy as np
+
+from repro.core import shm as _shm
 
 
 class HostEnv:
@@ -47,13 +63,22 @@ class HostEnv:
         raise NotImplementedError
 
 
+class RemoteEnvError(RuntimeError):
+    """A worker-process exception, reconstructed from its shm error row.
+
+    The original traceback lives in the (dead) worker; ``str()`` carries the
+    worker-side ``"ExcType: message"`` text."""
+
+
 class HostEnvError(RuntimeError):
     """A worker env raised; re-raised on the consumer thread by ``recv``."""
 
     def __init__(self, env_index: int, op: str, cause: BaseException):
-        super().__init__(
-            f"host env {env_index} raised in {op}: "
-            f"{type(cause).__name__}: {cause}")
+        # RemoteEnvError text already reads "ExcType: message" — don't
+        # double-prefix it with its own class name
+        detail = (str(cause) if isinstance(cause, RemoteEnvError)
+                  else f"{type(cause).__name__}: {cause}")
+        super().__init__(f"host env {env_index} raised in {op}: {detail}")
         self.env_index = env_index
         self.op = op
 
@@ -68,6 +93,10 @@ class _WorkerFailure:
 # "no timeout argument given" marker: distinguishes recv() (use the pool's
 # default) from recv(timeout=None) (explicitly wait forever)
 _UNSET = object()
+
+# unlinked-but-unclosable segments (a view was pinned by a caller-held
+# traceback at close time); held so their finalizer never retries close
+_LEAKED_SEGS: list = []
 
 
 class HostPool:
@@ -84,16 +113,26 @@ class HostPool:
     Batch rows are sorted by env index, so with num_envs == batch_size the
     pool degrades to *deterministic* synchronous vectorization (wait for
     everyone, rows always 0..M-1) — the paper's baseline.
+
+    ``backend="proc"`` dispatches construction to :class:`ProcHostPool`
+    (same API; requires a picklable ``env_fns`` and a ``slab`` row spec).
+    ``rew_shape`` is the per-env reward row shape — ``()`` scalar,
+    ``(num_agents,)`` multi-agent; when omitted it is inferred from the
+    widest-rank reward seen in a batch (rank, not lexicographic order).
     """
 
     def __init__(self, env_fns: Sequence[Callable[[], HostEnv]],
                  batch_size: int, seed: int = 0,
-                 recv_timeout: float = None):
+                 recv_timeout: float = None, *, backend: str = "thread",
+                 rew_shape: tuple = None, slab: "_shm.SlabSpec" = None,
+                 spin: "_shm.SpinConfig" = None):
+        assert backend == "thread", backend     # "proc" dispatched by __new__
         self.M = len(env_fns)
         self.N = batch_size
         assert 1 <= self.N <= self.M
         self.seed = seed
         self.recv_timeout = recv_timeout
+        self.rew_shape = None if rew_shape is None else tuple(rew_shape)
         self._envs: List[HostEnv] = [fn() for fn in env_fns]
         self._ready: "queue.Queue" = queue.Queue()
         self._threads: List[threading.Thread] = []
@@ -111,6 +150,15 @@ class HostPool:
             self._threads.append(t)
         for i in range(self.M):                 # initial resets (episode 0)
             self._inboxes[i].put(("reset", seed + i))
+
+    def __new__(cls, env_fns=None, batch_size=None, seed=0,
+                recv_timeout=None, *, backend="thread", **kw):
+        # Backend dispatch at the public constructor: HostPool(...,
+        # backend="proc") builds a ProcHostPool (type.__call__ then runs
+        # type(obj).__init__, i.e. ProcHostPool.__init__, with these args).
+        if cls is HostPool and backend == "proc":
+            return super().__new__(ProcHostPool)
+        return super().__new__(cls)
 
     def _worker(self, i: int):
         env = self._envs[i]
@@ -174,13 +222,24 @@ class HostPool:
             if isinstance(it, _WorkerFailure):
                 raise HostEnvError(it.env_index, it.op, it.exc) from it.exc
             items.append(it)
+        return self._assemble(items)
+
+    def _assemble(self, items):
+        """Batch (i, obs, rew, done, raw_info, is_step) items — shared by
+        both backends so row layout/dtypes/info stay bitwise-identical."""
         items.sort(key=lambda it: it[0])        # deterministic row layout
         ids = np.asarray([it[0] for it in items])
         obs = np.stack([np.asarray(it[1]) for it in items])
         # initial-reset rows carry scalar 0.0 rewards; broadcast them to the
         # step-reward shape (per-agent vectors for multi-agent envs)
         rews = [np.asarray(it[2], np.float32) for it in items]
-        shp = max((r.shape for r in rews), default=())
+        shp = self.rew_shape
+        if shp is None:
+            # fall back to the widest-RANK reward in the batch. (A plain
+            # max() over shapes compares lexicographically — between (2,)
+            # and (10,) it picks (2,) and the stack breaks for mixed-rank
+            # batches; the pool's declared rew_shape is authoritative.)
+            shp = max((r.shape for r in rews), key=len, default=())
         rew = np.stack([np.broadcast_to(r, shp) for r in rews])
         done = np.asarray([it[3] for it in items], bool)
         info = self._episode_stats(items)
@@ -211,8 +270,22 @@ class HostPool:
                 "episode_length": ep_len, "valid": valid}
 
     def send(self, actions, env_ids):
+        """Queue one step per env. Bounded: an unbounded ``put`` on the
+        size-1 inbox of a worker that died mid-step blocked forever; now the
+        put re-checks worker liveness and raises ``HostEnvError`` instead."""
         for a, i in zip(np.asarray(actions), env_ids):
-            self._inboxes[int(i)].put(("step", a))
+            i = int(i)
+            while True:
+                try:
+                    self._inboxes[i].put(("step", a), timeout=0.05)
+                    break
+                except queue.Full:
+                    if self._stop:
+                        return                  # pool is closing; drop
+                    if not self._threads[i].is_alive():
+                        raise HostEnvError(i, "send", RuntimeError(
+                            "worker thread is dead and its inbox is full; "
+                            "command undeliverable")) from None
 
     def close(self, timeout: float = 5.0):
         """Stop workers and join them. Drains each inbox before posting the
@@ -236,3 +309,207 @@ class HostPool:
         deadline = time.monotonic() + timeout
         for t in self._threads:
             t.join(timeout=max(0.0, deadline - time.monotonic()))
+
+
+class ProcHostPool(HostPool):
+    """``backend="proc"``: spawn worker processes + shared-memory slabs.
+
+    Each env gets a row in one per-pool ``SharedMemory`` segment (layout:
+    ``core/shm.SlabLayout``). The parent writes actions/seeds into the rows
+    and flips the env's ctrl byte to CMD_*; the worker steps the env
+    in-process, writes obs/rew/done/episode-stat fields back into the rows
+    and flips the byte to READY. Both sides wait on the byte with the
+    spin → sched_yield → sleep ladder; nothing is pickled after startup.
+
+    Requirements beyond the thread backend: ``env_fns`` must pickle (spawn
+    context — module-level classes / ``functools.partial``; see
+    ``shm.dumps_env_fn``) and ``slab`` (a ``shm.SlabSpec``) must describe
+    the per-env obs/action/reward rows. Harvested-but-undelivered results
+    are buffered FIFO across ``recv`` calls, which also keeps first-finisher
+    batches fair (a pure index scan would starve high-index envs).
+    """
+
+    def __init__(self, env_fns: Sequence[Callable[[], HostEnv]],
+                 batch_size: int, seed: int = 0,
+                 recv_timeout: float = None, *, backend: str = "proc",
+                 rew_shape: tuple = None, slab: "_shm.SlabSpec" = None,
+                 spin: "_shm.SpinConfig" = None):
+        assert backend == "proc", backend
+        if slab is None:
+            raise ValueError(
+                "backend='proc' needs slab=shm.SlabSpec(obs_shape, "
+                "act_shape, ...) to size the shared-memory rows")
+        self.M = len(env_fns)
+        self.N = batch_size
+        assert 1 <= self.N <= self.M
+        self.seed = seed
+        self.recv_timeout = recv_timeout
+        self.slab = slab
+        self.spin = spin or _shm.default_spin(workers=self.M)
+        self.rew_shape = (tuple(slab.rew_shape) if rew_shape is None
+                          else tuple(rew_shape))
+        self._closed = False
+        self._ep_return = np.zeros((self.M,), np.float64)
+        self._ep_length = np.zeros((self.M,), np.int64)
+        payloads = [_shm.dumps_env_fn(fn) for fn in env_fns]  # fail fast
+        self._layout = _shm.SlabLayout(slab, self.M)
+        from multiprocessing import get_context, shared_memory
+        self._seg = shared_memory.SharedMemory(
+            create=True, size=self._layout.nbytes)
+        self._v = self._layout.views(self._seg.buf)
+        self._v["ctrl"][:] = _shm.IDLE
+        self._v["stop"][0] = 0
+        # initial resets (episode 0): command rows first, then spawn
+        self._v["seed"][:] = seed + np.arange(self.M, dtype=np.int64)
+        self._v["ctrl"][:] = _shm.CMD_RESET
+        self._out = set(range(self.M))          # env ids with commands queued
+        self._fifo: List[tuple] = []            # harvested, undelivered items
+        ctx = get_context("spawn")              # never fork: jax-in-parent
+        self._procs = []
+        for i in range(self.M):
+            cfg = _shm.WorkerConfig(
+                shm_name=self._seg.name, index=i, M=self.M, seed=seed,
+                spec=slab, spin=self.spin, payload=payloads[i])
+            p = ctx.Process(target=_shm.worker_main, args=(cfg,), daemon=True)
+            p.start()
+            self._procs.append(p)
+
+    # -- harvesting ---------------------------------------------------------
+
+    def _raise_error(self, i: int):
+        op, msg = _shm.read_error(self._v, i)
+        err = RemoteEnvError(msg)
+        raise HostEnvError(i, op, err) from err
+
+    def _harvest_ready(self) -> bool:
+        """Copy every READY env's rows into the FIFO; raise on ERROR.
+
+        No slab view may live in a local when an exception leaves this
+        frame — the traceback would pin the numpy buffer export and
+        ``close()``'s ``seg.close()`` would hit BufferError. Views stay
+        inside ``self._v`` (released by close) and raising is deferred
+        until the loop locals are dropped."""
+        got = False
+        err_i = -1
+        v = self._v
+        for i in range(self.M):
+            st = int(v["ctrl"][i])
+            if st == _shm.ERROR:
+                err_i = i
+                break
+            if st != _shm.READY:
+                continue
+            item = (i,
+                    v["obs"][i].copy(),
+                    v["rew"][i].copy(),
+                    bool(v["done"][i]),
+                    {"score": float(v["score"][i])} if v["meta"][i, 1]
+                    else None,
+                    bool(v["meta"][i, 0]))
+            v["ctrl"][i] = _shm.IDLE            # row copied; slot reusable
+            self._out.discard(i)
+            self._fifo.append(item)
+            got = True
+        del v
+        if err_i >= 0:
+            self._out.discard(err_i)
+            self._raise_error(err_i)
+        return got
+
+    def _check_liveness(self):
+        for i in sorted(self._out):
+            st = int(self._v["ctrl"][i])
+            if st in (_shm.READY, _shm.ERROR):
+                continue                        # result landed; not stuck
+            p = self._procs[i]
+            if not p.is_alive():
+                self._out.discard(i)
+                err = RemoteEnvError(
+                    f"worker process died without reporting (exitcode "
+                    f"{p.exitcode})")
+                raise HostEnvError(i, "step", err) from err
+
+    def recv(self, timeout: float = _UNSET):
+        """First-finisher batch of N envs (FIFO over harvested results).
+
+        Same contract as the thread backend: ``HostEnvError`` on env crash
+        (including a worker process dying without reporting), ``TimeoutError``
+        when fewer than N envs finish in ``timeout`` seconds."""
+        if timeout is _UNSET:
+            timeout = self.recv_timeout
+        deadline = None if timeout is None else time.monotonic() + timeout
+        wait = _shm.SpinWait(self.spin)
+        while len(self._fifo) < self.N:
+            if self._harvest_ready():
+                wait.reset()
+                continue
+            self._check_liveness()
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"HostPool.recv timed out after {timeout}s with "
+                    f"{len(self._fifo)}/{self.N} envs ready (slow or "
+                    f"deadlocked worker?)")
+            wait.pause()
+        items = self._fifo[:self.N]
+        del self._fifo[:self.N]
+        return self._assemble(items)
+
+    def send(self, actions, env_ids):
+        """Write action rows and flip ctrl to CMD_STEP. Refuses (with
+        ``HostEnvError``) to command a dead or errored worker — the proc
+        analogue of the bounded-put liveness check."""
+        acts = np.asarray(actions)
+        for a, i in zip(acts, env_ids):
+            i = int(i)
+            st = int(self._v["ctrl"][i])        # no view locals: see harvest
+            if st == _shm.ERROR:
+                self._out.discard(i)
+                self._raise_error(i)
+            if not self._procs[i].is_alive():
+                err = RemoteEnvError(
+                    f"worker process is dead (exitcode "
+                    f"{self._procs[i].exitcode}); command undeliverable")
+                raise HostEnvError(i, "send", err) from err
+            if st != _shm.IDLE:
+                raise RuntimeError(
+                    f"send to env {i} whose ctrl slot is {st} (double send "
+                    f"without recv?)")
+            self._v["act"][i] = np.asarray(
+                a, self._v["act"].dtype).reshape(self.slab.act_shape)
+            self._out.add(i)
+            self._v["ctrl"][i] = _shm.CMD_STEP
+
+    def close(self, timeout: float = 5.0):
+        """Raise the stop byte, join workers, terminate stragglers, unlink
+        the segment. Unlike threads, a worker stuck in a long env.step is
+        *actually killed* — close() is bounded even mid-step."""
+        if self._closed:
+            return
+        self._closed = True
+        self._v["stop"][0] = 1
+        deadline = time.monotonic() + timeout
+        for p in self._procs:
+            p.join(timeout=max(0.0, deadline - time.monotonic()))
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=1.0)
+        self._v = None                          # drop views before close()
+        try:
+            self._seg.close()
+        except BufferError:
+            # a caller-held traceback still pins a slab view; unlink anyway
+            # (frees the name; the mapping dies with the process). Keep the
+            # object alive so its finalizer doesn't retry close() at gc.
+            _LEAKED_SEGS.append(self._seg)
+        try:
+            self._seg.unlink()
+        except FileNotFoundError:
+            pass
+
+    def __del__(self):
+        try:
+            if not getattr(self, "_closed", True):
+                self.close(timeout=0.5)
+        except Exception:
+            pass

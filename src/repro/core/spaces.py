@@ -14,9 +14,16 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Any, Mapping, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+
+def _canon_dtype(dtype):
+    """Canonical numpy scalar type for a leaf dtype. jax's scalar aliases
+    (``jnp.int32`` etc.) are distinct objects from numpy's, so without
+    canonicalization two structurally identical spaces built on either side
+    of the jax boundary would compare unequal; this keeps the module (and
+    every shared-memory worker that unpickles a space) jax-import-free."""
+    return np.dtype(dtype).type
 
 
 class Space:
@@ -26,27 +33,32 @@ class Space:
 @dataclass(frozen=True)
 class Discrete(Space):
     n: int
-    dtype: Any = jnp.int32
+    dtype: Any = np.int32
+
+    def __post_init__(self):
+        object.__setattr__(self, "dtype", _canon_dtype(self.dtype))
 
 
 @dataclass(frozen=True)
 class MultiDiscrete(Space):
     nvec: tuple
-    dtype: Any = jnp.int32
+    dtype: Any = np.int32
 
     def __post_init__(self):
         object.__setattr__(self, "nvec", tuple(int(n) for n in self.nvec))
+        object.__setattr__(self, "dtype", _canon_dtype(self.dtype))
 
 
 @dataclass(frozen=True)
 class Box(Space):
     shape: tuple
-    dtype: Any = jnp.float32
+    dtype: Any = np.float32
     low: float = -np.inf
     high: float = np.inf
 
     def __post_init__(self):
         object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+        object.__setattr__(self, "dtype", _canon_dtype(self.dtype))
 
 
 @dataclass(frozen=True)
@@ -96,20 +108,26 @@ def leaf_shape(space: Space) -> tuple:
 
 
 def leaf_dtype(space: Space):
-    return jnp.dtype(space.dtype)
+    return np.dtype(space.dtype)
 
 
 def zeros(space: Space):
-    """A zero element of the space as a pytree."""
+    """A zero element of the space as a pytree. Leaves are numpy — under a
+    trace they fold to constants, and the only consumers (``unemulate`` /
+    ``np_unemulate_action``) overwrite every leaf anyway."""
     if isinstance(space, Dict):
         return {k: zeros(s) for k, s in space.items()}
     if isinstance(space, Tuple):
         return tuple(zeros(s) for s in space.spaces)
-    return jnp.zeros(leaf_shape(space), leaf_dtype(space))
+    return np.zeros(leaf_shape(space), leaf_dtype(space))
 
 
 def sample(space: Space, key):
-    """Random element (uniform over the space) — used in tests/mocks."""
+    """Random element (uniform over the space) — used in tests/mocks.
+    The only jax-dependent function in this module; imported lazily so the
+    shared-memory env workers can unpickle spaces without loading jax."""
+    import jax
+    import jax.numpy as jnp
     if isinstance(space, Dict):
         ks = jax.random.split(key, len(space.spaces))
         return {k: sample(s, kk) for (k, s), kk in zip(space.items(), ks)}

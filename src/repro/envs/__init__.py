@@ -1,3 +1,25 @@
-from repro.envs import base, ocean
-from repro.envs.ocean import OCEAN, make
-from repro.envs.conformance import ConformanceReport, check_env
+# Lazy (PEP 562) like repro.core: shared-memory env workers unpickle
+# `ocean_host` mirror classes, which imports this package — it must not pull
+# jax (ocean/conformance are jax-heavy; ocean_host is numpy-only).
+
+_SUBMODULES = ("base", "ocean", "ocean_host", "conformance")
+_SYMBOLS = {
+    "OCEAN": "ocean", "make": "ocean",
+    "ConformanceReport": "conformance", "check_env": "conformance",
+}
+
+__all__ = list(_SUBMODULES) + list(_SYMBOLS)
+
+
+def __getattr__(name):
+    import importlib
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.envs.{name}")
+    if name in _SYMBOLS:
+        mod = importlib.import_module(f"repro.envs.{_SYMBOLS[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.envs' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

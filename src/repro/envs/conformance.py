@@ -806,14 +806,15 @@ def check_host_env(factory, *, name: str = None,
 
 
 def run_cli(env_arg: str, seed: int = 0, host: bool = False,
-            selfplay: bool = False) -> int:
+            selfplay: bool = False, host_backend: str = "thread") -> int:
     """Check 'all' or a comma-separated name list against the registry,
     print each report, return a process exit code (1 on any violation).
     Shared by this module's __main__ and ``launch.train --conformance``.
     With ``host=True`` the names come from the ``OCEAN_HOST`` mirror
-    registry and run the host profile through ``bridge.wrap``; with
-    ``selfplay=True`` the competitive-env profile runs instead of the base
-    one."""
+    registry and run the host profile through ``bridge.wrap`` on the given
+    ``host_backend`` ("thread" | "proc" — the contract is backend-
+    independent, so both must pass the same checks); with ``selfplay=True``
+    the competitive-env profile runs instead of the base one."""
     if selfplay:
         from repro.envs.ocean import OCEAN
         names = list(OCEAN) if env_arg == "all" \
@@ -833,8 +834,9 @@ def run_cli(env_arg: str, seed: int = 0, host: bool = False,
         for name in names:
             cls = OCEAN_HOST[name]
             report = check_host_env(
-                lambda cls=cls: wrap(cls, num_envs=2, seed=seed),
-                name=f"host/{name}", seed=seed)
+                lambda cls=cls: wrap(cls, num_envs=2, seed=seed,
+                                     backend=host_backend),
+                name=f"host/{name}[{host_backend}]", seed=seed)
             print(report.summary())
             bad += not report.ok
         return 1 if bad else 0
@@ -861,10 +863,14 @@ def main(argv=None):
     ap.add_argument("--selfplay", action="store_true",
                     help="run the competitive-env (league) profile: "
                          "zero-sum, role-swap symmetry, team done")
+    ap.add_argument("--host-backend", default="thread",
+                    choices=("thread", "proc"),
+                    help="worker backend for the host profile (the contract "
+                         "must hold under both)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     return run_cli(args.env, seed=args.seed, host=args.host,
-                   selfplay=args.selfplay)
+                   selfplay=args.selfplay, host_backend=args.host_backend)
 
 
 if __name__ == "__main__":

@@ -141,6 +141,107 @@ class HostSquared:
         return self._obs(), reward, done, info
 
 
+class HostCrafterLite:
+    """Duck-typed Crafter-shaped gridworld whose step cost is *pure-Python
+    bytecode* — the workload class where thread pools serialize on the GIL
+    and ``backend="proc"`` actually parallelizes.
+
+    The agent walks a g×g grid, gathers wood/stone nodes, and crafts tools
+    (2 wood + 1 stone → reward 1; gather → 0.1). World randomness is a
+    64-bit LCG advanced ``work`` times per step — that walk *is* the CPU
+    burn (~2 ms at the default ``work`` on a ~2020s core) and it is
+    load-bearing: its final state places regrown resources, so the burn
+    cannot be optimized away without changing the dynamics. All integer
+    arithmetic ⇒ bitwise-deterministic across processes and backends.
+
+    ``sleep_ms`` swaps the burn profile: a GIL-*releasing* ``time.sleep``
+    before the (still deterministic) dynamics, for the benchmark cell where
+    threads are already optimal and proc must stay within ~15%.
+
+    Score = tools crafted / (horizon // 8), clipped to [0, 1].
+    """
+
+    MOVES = ((-1, 0), (1, 0), (0, -1), (0, 1))
+    _LCG_MUL = 6364136223846793005
+    _LCG_ADD = 1442695040888963407
+    _MASK = (1 << 64) - 1
+
+    def __init__(self, size: int = 8, horizon: int = 32,
+                 work: int = 20_000, sleep_ms: float = 0.0):
+        self.size, self.horizon = size, horizon
+        self.work = int(work)
+        self.sleep_ms = float(sleep_ms)
+        self.observation_space = sp.Box((size * size + 4,))
+        self.action_space = sp.Discrete(6)      # N, S, W, E, gather, craft
+        self._h = 1
+        self.pos = [0, 0]
+        self.res: dict = {}                     # cell -> 1 (wood) | 2 (stone)
+        self.inv = [0, 0, 0]                    # wood, stone, tools
+        self.t, self.tools = 0, 0
+
+    def _mix(self, rounds: int) -> int:
+        h = self._h
+        mul, add, mask = self._LCG_MUL, self._LCG_ADD, self._MASK
+        for _ in range(rounds):
+            h = (h * mul + add) & mask
+        self._h = h
+        return h
+
+    def reset(self, seed):
+        s = 0 if seed is None else int(seed)
+        self._h = ((s * 2654435761 + 0x9E3779B9) & self._MASK) or 1
+        g = self.size
+        self.pos = [g // 2, g // 2]
+        self.res = {}
+        for kind in (1, 2):                     # g wood + g stone nodes
+            for _ in range(g):
+                self.res.setdefault((self._mix(1) >> 16) % (g * g), kind)
+        self.inv = [0, 0, 0]
+        self.t, self.tools = 0, 0
+        return self._obs()
+
+    def _obs(self):
+        g = self.size
+        o = np.zeros((g * g + 4,), np.float32)
+        for c, kind in self.res.items():
+            o[c] = 0.33 * kind
+        o[self.pos[0] * g + self.pos[1]] = 1.0
+        o[g * g + 0] = self.inv[0] / 8.0
+        o[g * g + 1] = self.inv[1] / 8.0
+        o[g * g + 2] = self.inv[2] / 8.0
+        o[g * g + 3] = self.t / self.horizon
+        return o
+
+    def step(self, action):
+        if self.sleep_ms > 0:
+            time.sleep(self.sleep_ms / 1e3)
+        h = self._mix(self.work)                # CPU burn + world rng tick
+        a, g = int(action), self.size
+        rew = 0.0
+        if a < 4:
+            self.pos[0] = min(max(self.pos[0] + self.MOVES[a][0], 0), g - 1)
+            self.pos[1] = min(max(self.pos[1] + self.MOVES[a][1], 0), g - 1)
+        elif a == 4:                            # gather
+            kind = self.res.pop(self.pos[0] * g + self.pos[1], 0)
+            if kind:
+                self.inv[kind - 1] += 1
+                rew += 0.1
+                self.res.setdefault((h >> 16) % (g * g), kind)  # regrow
+        else:                                   # craft: 2 wood + 1 stone
+            if self.inv[0] >= 2 and self.inv[1] >= 1:
+                self.inv[0] -= 2
+                self.inv[1] -= 1
+                self.inv[2] += 1
+                self.tools += 1
+                rew += 1.0
+        self.t += 1
+        done = self.t >= self.horizon
+        info = {}
+        if done:
+            info["score"] = min(1.0, self.tools / max(1, self.horizon // 8))
+        return self._obs(), rew, done, info
+
+
 # ---------------------------------------------------------------------------
 
 
@@ -251,6 +352,7 @@ class HostTeam:
 OCEAN_HOST = {
     "bandit": HostBandit,
     "squared": HostSquared,
+    "crafter": HostCrafterLite,
     "drone": HostDrone,
     "team": HostTeam,
 }

@@ -1,2 +1,24 @@
-# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time.
-from repro.launch import mesh
+"""Launchers. Lazy (PEP 562) like ``repro.core``: under ``python -m
+repro.launch.train --host-backend proc`` every spawn worker re-imports the
+parent's main module (``repro.launch.train`` as ``__mp_main__``), so this
+package must not pull jax at import time — ``mesh`` costs ~0.4 s of jax per
+worker and trips ``shm.worker_main``'s forked-jax guard.
+
+NOTE: do not import dryrun eagerly either — it sets XLA_FLAGS at import
+time.
+"""
+
+_SUBMODULES = ("mesh", "train", "serve", "dryrun", "hlo_analysis")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name):
+    import importlib
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.launch.{name}")
+    raise AttributeError(f"module 'repro.launch' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

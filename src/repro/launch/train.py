@@ -27,6 +27,12 @@ def main():
                     help="host-mirror env name(s, comma-separated) or 'all' "
                          "(envs/ocean_host.py registry), trained through "
                          "bridge.wrap on the host tier")
+    ap.add_argument("--host-backend", default=None,
+                    choices=("thread", "proc"),
+                    help="host-tier worker backend: 'thread' (default; env "
+                         "steps that release the GIL) or 'proc' (shared-"
+                         "memory spawn processes; pure-Python env steps "
+                         "parallelize across cores)")
     ap.add_argument("--updates-per-launch", "-K", type=int, default=1,
                     help="fused updates per host dispatch (engine K)")
     ap.add_argument("--selfplay", action="store_true",
@@ -90,12 +96,14 @@ def main():
         for name in names:
             p = preset(name)
             tcfg = ocean_tcfg(name, checkpoint_dir=args.ckpt_dir,
-                              engine_backend="host", updates_per_launch=1)
+                              engine_backend="host", updates_per_launch=1,
+                              host_backend=args.host_backend or "thread")
             eng = make_host_engine(OCEAN_HOST[name], tcfg, hidden=p.hidden,
                                    recurrent=p.recurrent, seed=args.seed)
             steps = args.total_env_steps or p.total_steps
             print(f"=== host/{name} (M={eng.hvec.num_envs} "
-                  f"N={eng.hvec.batch_envs}) ===")
+                  f"N={eng.hvec.batch_envs} "
+                  f"workers={eng.hvec.backend}) ===")
             try:
                 hist, solved = eng.run(steps,
                                        target_score=p.target_score)

@@ -25,9 +25,12 @@ Four execution tiers behind one ``run(total_steps)`` API:
                     host-bound envs: while the learner consumes buffer i,
                     buffer i+1's env step is already on the device queue.
   * ``host``      — bridged third-party host envs (bridge/): a first-
-                    finisher ``HostVecEnv`` steps M = 2N envs on worker
-                    threads while jitted inference + the same
-                    ``make_ocean_learn`` update stay device-resident.
+                    finisher ``HostVecEnv`` steps M = 2N envs on workers —
+                    threads, or shared-memory spawn processes when built
+                    with ``backend="proc"`` (``tcfg.host_backend``; the
+                    engine is agnostic, the pool protocol is identical) —
+                    while jitted inference + the same ``make_ocean_learn``
+                    update stay device-resident.
                     Rollout fragments accumulate *per env* keyed by the
                     pool's ``env_ids``, so GAE bootstraps and recurrent
                     carries stay per-env correct even though every batch is
@@ -561,7 +564,8 @@ class TrainEngine:
 
     # -- host tier -------------------------------------------------------------
     def close(self):
-        """Release host-side resources (worker threads of the host tier)."""
+        """Release host-side resources (the host tier's worker threads, or
+        its worker processes + shared-memory slab under backend="proc")."""
         if self.backend == "host":
             self.hvec.close()
 

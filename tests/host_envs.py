@@ -1,0 +1,71 @@
+"""Module-level helper host envs for the HostBridge tests.
+
+These live outside ``test_host_bridge.py`` so the ``backend="proc"`` suites
+can pickle them into spawn workers by reference: a worker then imports only
+this module (numpy + ``repro.core.spaces``, both jax-free) instead of the
+test module, which imports jax at the top and would add seconds of startup
+per worker process.
+"""
+import time
+
+import numpy as np
+
+from repro.core import spaces as sp
+
+
+class SlowEnv:
+    """Duck env whose step blocks long enough to trip small timeouts."""
+
+    def __init__(self, step_s: float = 30.0):
+        self.step_s = step_s
+        self.observation_space = sp.Box((1,))
+        self.action_space = sp.Discrete(2)
+
+    def reset(self, seed):
+        return np.zeros(1, np.float32)
+
+    def step(self, a):
+        time.sleep(self.step_s)
+        return np.zeros(1, np.float32), 0.0, False, {}
+
+
+class CrashyEnv:
+    """Duck env that raises on the k-th step (or on reset)."""
+
+    def __init__(self, crash_step: int = 3, crash_reset: bool = False):
+        self.crash_step, self.crash_reset = crash_step, crash_reset
+        self.observation_space = sp.Box((1,))
+        self.action_space = sp.Discrete(2)
+        self.t = 0
+
+    def reset(self, seed):
+        if self.crash_reset:
+            raise RuntimeError("reset kaboom")
+        self.t = 0
+        return np.zeros(1, np.float32)
+
+    def step(self, a):
+        self.t += 1
+        if self.t >= self.crash_step:
+            raise RuntimeError("step kaboom")
+        return np.zeros(1, np.float32), 1.0, False, {}
+
+
+class JitterEnv:
+    """Duck env with lognormal step latency (first-finisher tests)."""
+
+    def __init__(self, mean_ms=0.5, seed=0, horizon=64):
+        self.observation_space = sp.Box((2,))
+        self.action_space = sp.Discrete(2)
+        self.rng = np.random.RandomState(seed)
+        self.mean_ms, self.horizon, self.t = mean_ms, horizon, 0
+
+    def reset(self, seed):
+        self.t = 0
+        return np.zeros(2, np.float32)
+
+    def step(self, a):
+        time.sleep(self.rng.lognormal(np.log(self.mean_ms), 0.6) / 1e3)
+        self.t += 1
+        done = self.t >= self.horizon
+        return np.zeros(2, np.float32), 0.0, done, {}

@@ -101,6 +101,51 @@ def test_blocking_with_timeout_not_flagged():
     assert "BLOCKING-NO-TIMEOUT" not in _rules(fs)
 
 
+def test_blocking_gate_sees_submodule_imports():
+    """``import multiprocessing.shared_memory`` must arm the threaded-code
+    gate (root-normalized), so multiprocessing Queue.get()/Process.join()
+    sites are covered like their ``queue``/``threading`` twins."""
+    fs = check_source(_src("""
+        import multiprocessing.shared_memory
+
+        def pump(q, p):
+            item = q.get()
+            p.join()
+            return item
+    """))
+    assert sum(f.rule == "BLOCKING-NO-TIMEOUT" for f in fs) == 2
+
+
+def test_blocking_connection_wait_flagged():
+    """``connection.wait(objects)`` blocks forever by default — its
+    positional arg is the object list, not a timeout."""
+    fs = check_source(_src("""
+        from multiprocessing import connection
+
+        def pump(sentinels):
+            return connection.wait(sentinels)
+    """))
+    assert "BLOCKING-NO-TIMEOUT" in _rules(fs)
+
+    fs = check_source(_src("""
+        from multiprocessing import connection
+
+        def pump(sentinels):
+            return connection.wait(sentinels, timeout=1.0)
+    """))
+    assert "BLOCKING-NO-TIMEOUT" not in _rules(fs)
+
+
+def test_blocking_bare_wait_from_import_flagged():
+    fs = check_source(_src("""
+        from multiprocessing.connection import wait
+
+        def pump(sentinels):
+            return wait(sentinels)
+    """))
+    assert "BLOCKING-NO-TIMEOUT" in _rules(fs)
+
+
 def test_nondet_in_pure_on_time_call():
     fs = check_source(_src("""
         import time

@@ -1,88 +1,44 @@
 """HostBridge: wrap() API detection, HostPool hardening (crash propagation,
-seeded autoreset, close), first-finisher batching, the conformance host
-profile, and the TrainEngine ``host`` tier (incl. JAX-vs-host parity
+seeded autoreset, close), first-finisher batching — all parametrized over
+the ``thread`` and shared-memory ``proc`` backends — plus the conformance
+host profile and the TrainEngine ``host`` tier (incl. JAX-vs-host parity
 training). Every blocking call carries a timeout so a regression can never
 hang the suite."""
+import functools
+import os
+import subprocess
+import sys
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
 import pytest
 
+# module-level (picklable into spawn workers without importing this
+# jax-loading test module); pytest puts tests/ on sys.path
+from host_envs import CrashyEnv, JitterEnv, SlowEnv
+
 from repro.bridge import (convert_space, detect_api, make_host_engine,
                           np_emulate_obs, np_unemulate_action, wrap)
 from repro.configs.base import TrainConfig
 from repro.core import emulation as em
+from repro.core import shm
 from repro.core import spaces as sp
-from repro.core.host import HostEnvError, HostPool
-from repro.envs.ocean_host import (OCEAN_HOST, HostBandit, HostDrone,
-                                   HostSquared, HostTeam)
+from repro.core.host import HostEnvError, HostPool, ProcHostPool
+from repro.envs.ocean_host import (OCEAN_HOST, HostBandit, HostCrafterLite,
+                                   HostDrone, HostSquared, HostTeam)
 
 RECV_T = 30.0          # generous per-call bound; hit only on regressions
+BACKENDS = ("thread", "proc")
 
 TCFG = TrainConfig(num_envs=8, unroll_length=8, update_epochs=1,
                    num_minibatches=2, learning_rate=1e-3, gamma=0.95)
 
 
-# ---------------------------------------------------------------------------
-# helper envs
-
-class SlowEnv:
-    """Duck env whose step blocks long enough to trip small timeouts."""
-
-    def __init__(self, step_s: float = 30.0):
-        self.step_s = step_s
-        self.observation_space = sp.Box((1,))
-        self.action_space = sp.Discrete(2)
-
-    def reset(self, seed):
-        return np.zeros(1, np.float32)
-
-    def step(self, a):
-        time.sleep(self.step_s)
-        return np.zeros(1, np.float32), 0.0, False, {}
-
-
-class CrashyEnv:
-    """Duck env that raises on the k-th step (or on reset)."""
-
-    def __init__(self, crash_step: int = 3, crash_reset: bool = False):
-        self.crash_step, self.crash_reset = crash_step, crash_reset
-        self.observation_space = sp.Box((1,))
-        self.action_space = sp.Discrete(2)
-        self.t = 0
-
-    def reset(self, seed):
-        if self.crash_reset:
-            raise RuntimeError("reset kaboom")
-        self.t = 0
-        return np.zeros(1, np.float32)
-
-    def step(self, a):
-        self.t += 1
-        if self.t >= self.crash_step:
-            raise RuntimeError("step kaboom")
-        return np.zeros(1, np.float32), 1.0, False, {}
-
-
-class JitterEnv:
-    """Duck env with lognormal step latency (first-finisher tests)."""
-
-    def __init__(self, mean_ms=0.5, seed=0, horizon=64):
-        self.observation_space = sp.Box((2,))
-        self.action_space = sp.Discrete(2)
-        self.rng = np.random.RandomState(seed)
-        self.mean_ms, self.horizon, self.t = mean_ms, horizon, 0
-
-    def reset(self, seed):
-        self.t = 0
-        return np.zeros(2, np.float32)
-
-    def step(self, a):
-        time.sleep(self.rng.lognormal(np.log(self.mean_ms), 0.6) / 1e3)
-        self.t += 1
-        done = self.t >= self.horizon
-        return np.zeros(2, np.float32), 0.0, done, {}
+def workers_dead(pool) -> bool:
+    ws = pool._procs if isinstance(pool, ProcHostPool) else pool._threads
+    return not any(w.is_alive() for w in ws)
 
 
 # ---------------------------------------------------------------------------
@@ -203,13 +159,17 @@ def test_wrap_instance_requires_factory_for_many():
 # ---------------------------------------------------------------------------
 # pool semantics
 
-def test_first_finisher_batching():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_first_finisher_batching(backend):
     """M=2N jittered envs: batches are N distinct envs, every env gets
     served (no starvation), ids are sorted."""
-    v = wrap(lambda: JitterEnv(), num_envs=6, batch_size=3, seed=0)
+    v = wrap(JitterEnv, num_envs=6, batch_size=3, seed=0, backend=backend)
     seen = set()
     try:
-        for _ in range(16):
+        # loop until every env has been served (bounded): early rounds can
+        # outrun slow-spawning proc workers, so a fixed round count races
+        deadline = time.monotonic() + RECV_T
+        while seen != set(range(6)) and time.monotonic() < deadline:
             obs, rew, done, info, ids = v.recv(timeout=RECV_T)
             assert len(ids) == 3 and len(set(ids.tolist())) == 3
             assert sorted(ids.tolist()) == ids.tolist()
@@ -220,9 +180,10 @@ def test_first_finisher_batching():
     assert seen == set(range(6))
 
 
-def test_sync_degradation_deterministic_rows():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sync_degradation_deterministic_rows(backend):
     """M == N waits for everyone: every batch is exactly envs 0..M-1."""
-    v = wrap(lambda: JitterEnv(), num_envs=4, seed=0)
+    v = wrap(JitterEnv, num_envs=4, seed=0, backend=backend)
     try:
         for _ in range(6):
             obs, rew, done, info, ids = v.recv(timeout=RECV_T)
@@ -232,8 +193,10 @@ def test_sync_degradation_deterministic_rows():
         v.close()
 
 
-def test_crash_propagation_step():
-    v = wrap(lambda: CrashyEnv(crash_step=2), num_envs=2)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_crash_propagation_step(backend):
+    v = wrap(functools.partial(CrashyEnv, crash_step=2), num_envs=2,
+             backend=backend)
     try:
         v.reset(timeout=RECV_T)
         with pytest.raises(HostEnvError, match=r"env [01] raised in step"):
@@ -243,17 +206,22 @@ def test_crash_propagation_step():
         v.close()
 
 
-def test_crash_propagation_reset():
-    pool = HostPool([lambda: CrashyEnv(crash_reset=True)], batch_size=1)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_crash_propagation_reset(backend):
+    # api="duck" skips wrap()'s probe reset, which would crash in the parent
+    v = wrap(functools.partial(CrashyEnv, crash_reset=True), num_envs=1,
+             backend=backend, api="duck")
     try:
         with pytest.raises(HostEnvError, match="reset"):
-            pool.recv(timeout=RECV_T)
+            v.reset(timeout=RECV_T)
     finally:
-        pool.close()
+        v.close()
 
 
-def test_recv_timeout_guard():
-    v = wrap(lambda: SlowEnv(step_s=30.0), num_envs=1)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_recv_timeout_guard(backend):
+    v = wrap(functools.partial(SlowEnv, step_s=30.0), num_envs=1,
+             backend=backend)
     try:
         v.reset(timeout=RECV_T)
         t0 = time.monotonic()
@@ -261,18 +229,23 @@ def test_recv_timeout_guard():
             v.step(np.zeros((1, 1), np.int32), timeout=0.2)
         assert time.monotonic() - t0 < 5.0
     finally:
-        v.close(timeout=0.5)    # worker mid-sleep: close must still return
+        # worker mid-sleep: close must still return promptly (threads leave
+        # the daemon sleeping; the proc backend actually terminates it)
+        t0 = time.monotonic()
+        v.close(timeout=0.5)
+        assert time.monotonic() - t0 < 5.0
 
 
-def test_close_joins_idle_workers():
-    """close() drains inboxes and posts the sentinel, so idle workers join
-    promptly; double close is a no-op."""
-    v = wrap(HostBandit, num_envs=4)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_close_joins_idle_workers(backend):
+    """close() reaches idle workers promptly (inbox sentinel / stop byte),
+    so they all join; double close is a no-op."""
+    v = wrap(HostBandit, num_envs=4, backend=backend)
     v.reset(timeout=RECV_T)
     t0 = time.monotonic()
     v.close(timeout=5.0)
     assert time.monotonic() - t0 < 5.0
-    assert not any(t.is_alive() for t in v.pool._threads)
+    assert workers_dead(v.pool)
     v.close()                                   # idempotent
 
 
@@ -290,12 +263,13 @@ def test_close_with_undelivered_commands():
     assert not any(t.is_alive() for t in pool._threads)
 
 
-def test_seed_determinism_across_autoreset():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_seed_determinism_across_autoreset(backend):
     """Same-seed wrappers replay identical reward streams across episode
     boundaries (the per-env autoreset seed sequence); different seeds
     diverge."""
     def stream(seed):
-        v = wrap(HostBandit, num_envs=2, seed=seed)
+        v = wrap(HostBandit, num_envs=2, seed=seed, backend=backend)
         try:
             v.reset(timeout=RECV_T)
             rows = []
@@ -312,10 +286,11 @@ def test_seed_determinism_across_autoreset():
     assert not np.array_equal(a, c)
 
 
-def test_terminal_info_surfaced():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_terminal_info_surfaced(backend):
     """Autoreset surfaces episode stats exactly at episode end, valid==done,
     with the env's normalized score — the old pool discarded all of it."""
-    v = wrap(HostBandit, num_envs=2, seed=3)
+    v = wrap(HostBandit, num_envs=2, seed=3, backend=backend)
     try:
         v.reset(timeout=RECV_T)
         rets = np.zeros(2)
@@ -339,6 +314,176 @@ def test_terminal_info_surfaced():
 
 
 # ---------------------------------------------------------------------------
+# backend parity + proc-backend hardening
+
+def test_backend_sync_parity_bitwise():
+    """The acceptance cell: thread and proc backends are *bitwise* identical
+    in sync mode — obs, rew, done, every info field, and env_ids — over three
+    full episodes of the seeded HostBandit (horizon 16 → autoreset crossed
+    twice), so the slab round-trip and worker-side autoreset change nothing
+    observable."""
+    kw = dict(num_envs=4, seed=11, recv_timeout=RECV_T)
+    vt = wrap(HostBandit, **kw)
+    vp = wrap(HostBandit, backend="proc", **kw)
+    try:
+        np.testing.assert_array_equal(vt.reset(), vp.reset())
+        rng = np.random.default_rng(0)
+        for t in range(3 * 16):
+            acts = rng.integers(0, 4, size=(4, 1)).astype(np.int32)
+            o1, r1, d1, i1 = vt.step(acts, timeout=RECV_T)
+            o2, r2, d2, i2 = vp.step(acts, timeout=RECV_T)
+            assert np.array_equal(o1, o2), f"obs diverge at step {t}"
+            assert np.array_equal(r1, r2), f"rew diverge at step {t}"
+            assert np.array_equal(d1, d2), f"done diverge at step {t}"
+            np.testing.assert_array_equal(vt.last_ids, vp.last_ids)
+            assert i1.keys() == i2.keys()
+            for k in i1:
+                assert np.array_equal(i1[k], i2[k]), \
+                    f"info[{k!r}] diverges at step {t}"
+    finally:
+        vt.close()
+        vp.close()
+
+
+def test_backend_parity_cpu_heavy_env():
+    """Same check on the CPU-heavy HostCrafterLite (the env the proc backend
+    exists for): its LCG dynamics are seed-deterministic, so both backends
+    must produce identical trajectories."""
+    fn = functools.partial(HostCrafterLite, size=6, horizon=8, work=500)
+    vt = wrap(fn, num_envs=2, seed=3, recv_timeout=RECV_T)
+    vp = wrap(fn, num_envs=2, seed=3, recv_timeout=RECV_T, backend="proc")
+    try:
+        np.testing.assert_array_equal(vt.reset(), vp.reset())
+        for t in range(12):                     # crosses one autoreset
+            acts = np.full((2, 1), t % 6, np.int32)
+            a1 = vt.step(acts, timeout=RECV_T)
+            a2 = vp.step(acts, timeout=RECV_T)
+            for x, y in zip(a1[:3], a2[:3]):
+                assert np.array_equal(x, y), f"diverge at step {t}"
+    finally:
+        vt.close()
+        vp.close()
+
+
+def test_thread_send_dead_worker_raises():
+    """Satellite regression: ``send`` to a dead worker whose inbox is full
+    must raise ``HostEnvError``, not block forever (the old unbounded
+    ``put`` on the size-1 inbox deadlocked the trainer)."""
+    pool = HostPool([HostBandit, HostBandit], batch_size=2)
+    try:
+        pool.recv(timeout=RECV_T)
+        pool._inboxes[0].put(("close", None))   # kill worker 0 out-of-band
+        pool._threads[0].join(timeout=RECV_T)
+        assert not pool._threads[0].is_alive()
+        t0 = time.monotonic()
+        with pytest.raises(HostEnvError, match="dead"):
+            for _ in range(3):                  # 1st put lands in the empty
+                pool.send(np.zeros(2, np.int32), np.asarray([0, 1]))
+        assert time.monotonic() - t0 < 5.0      # bounded, not a deadlock
+    finally:
+        pool.close()
+
+
+def test_proc_send_dead_worker_raises():
+    """Proc analogue: a worker killed mid-flight turns ``send`` into
+    ``HostEnvError`` (liveness check), never a silent hang."""
+    v = wrap(HostBandit, num_envs=2, backend="proc")
+    try:
+        v.reset(timeout=RECV_T)
+        v.pool._procs[1].terminate()
+        v.pool._procs[1].join()
+        with pytest.raises(HostEnvError, match="dead"):
+            v.send(np.zeros((2, 1), np.int32), np.asarray([0, 1]))
+    finally:
+        v.close()
+
+
+def test_proc_dead_worker_detected_by_recv():
+    """A worker that dies *after* taking a command surfaces from recv() as
+    HostEnvError (exitcode in the message), not a TimeoutError."""
+    v = wrap(functools.partial(SlowEnv, step_s=30.0), num_envs=1,
+             backend="proc")
+    try:
+        v.reset(timeout=RECV_T)
+        v.send(np.zeros((1, 1), np.int32), np.asarray([0]))
+        v.pool._procs[0].terminate()
+        v.pool._procs[0].join()
+        with pytest.raises(HostEnvError, match="died without reporting"):
+            v.recv(timeout=RECV_T)
+    finally:
+        v.close()
+
+
+def test_proc_requires_slab_and_factory():
+    with pytest.raises(ValueError, match="slab"):
+        HostPool([HostBandit], batch_size=1, backend="proc")
+    with pytest.raises(ValueError, match="factory"):
+        wrap(HostBandit(), num_envs=1, backend="proc")
+
+
+def test_proc_backend_dispatch_and_slab_metadata():
+    """HostPool(..., backend="proc") constructs a ProcHostPool via __new__;
+    the bridge sizes the slab rows from the emulation specs."""
+    v = wrap(HostBandit, num_envs=2, backend="proc")
+    try:
+        assert isinstance(v.pool, ProcHostPool)
+        assert v.slab.obs_shape == (1,) and v.slab.act_shape == (1,)
+        assert v.slab.act_dtype == "int32" and v.slab.rew_shape == ()
+        assert v.pool._layout.nbytes > 0
+    finally:
+        v.close()
+
+
+def test_proc_lambda_factory_via_cloudpickle():
+    """Lambdas work under proc when cloudpickle is installed (it serializes
+    the closure by value; referenced classes stay by-reference imports)."""
+    pytest.importorskip("cloudpickle")
+    v = wrap(lambda: HostBandit(), num_envs=2, backend="proc")
+    try:
+        assert v.reset(timeout=RECV_T).shape == (2, 1)
+    finally:
+        v.close()
+
+
+def test_dumps_env_fn_error_without_cloudpickle(monkeypatch):
+    """Without cloudpickle, an unpicklable factory fails *fast* at
+    construction with an actionable message (not deep inside Process.start)."""
+    monkeypatch.setitem(sys.modules, "cloudpickle", None)
+    x = object()                                # closure → unpicklable
+    with pytest.raises(ValueError, match="module-level"):
+        shm.dumps_env_fn(lambda: x)
+
+
+def test_worker_main_refuses_forked_context():
+    """The worker entrypoint hard-fails if jax is already loaded (i.e. it
+    was forked off the jax-laden parent instead of spawned) — forked XLA
+    state deadlocks. This process has jax imported, so calling it inline
+    must refuse before touching the slab."""
+    cfg = shm.WorkerConfig(shm_name="nonexistent", index=0, M=1, seed=0,
+                           spec=shm.SlabSpec(obs_shape=(1,), act_shape=(1,)))
+    with pytest.raises(RuntimeError, match="spawn"):
+        shm.worker_main(cfg)
+
+
+def test_worker_import_chain_stays_jax_free():
+    """Satellite guard: the spawn-worker import chain (shm + bridge +
+    mirror envs) must never pull jax — jax is spawn-hostile and costs
+    seconds per worker. Probed in a clean interpreter."""
+    src = Path(shm.__file__).resolve().parents[2]      # .../src
+    # repro.launch.train is in the chain because spawn re-imports the
+    # parent's main module: under `python -m repro.launch.train` every
+    # worker imports it as __mp_main__ before worker_main runs
+    code = ("import sys; "
+            "import repro.core.shm, repro.bridge, repro.envs.ocean_host, "
+            "repro.launch.train; "
+            "assert 'jax' not in sys.modules, 'jax leaked into the chain'")
+    r = subprocess.run([sys.executable, "-c", code], timeout=120,
+                       capture_output=True, text=True,
+                       env={**os.environ, "PYTHONPATH": str(src)})
+    assert r.returncode == 0, r.stderr
+
+
+# ---------------------------------------------------------------------------
 # conformance host profile
 
 @pytest.mark.parametrize("name", sorted(OCEAN_HOST))
@@ -347,6 +492,16 @@ def test_host_profile_conformance(name):
     cls = OCEAN_HOST[name]
     report = check_host_env(lambda: wrap(cls, num_envs=2),
                             name=f"host/{name}")
+    assert report.ok, report.summary()
+
+
+def test_host_profile_conformance_proc_backend():
+    """The conformance host profile passes unchanged over the proc backend
+    (what ``conformance.run_cli --host-backend proc`` exercises)."""
+    from repro.envs.conformance import check_host_env
+    report = check_host_env(
+        lambda: wrap(HostBandit, num_envs=2, backend="proc"),
+        name="host/bandit[proc]")
     assert report.ok, report.summary()
 
 
