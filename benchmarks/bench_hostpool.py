@@ -107,9 +107,17 @@ def main(argv=None):
     cpu_ok = cells["cpu"]["proc_over_thread"] >= 2.0
     sleep_ok = cells["sleep"]["proc_over_thread"] >= 0.85
     if not multicore:
-        print("single-core machine: both proc-vs-thread criteria need real "
-              "parallelism (the spin/flag protocol itself costs a core); "
-              "recording measured ratios, asserting neither")
+        print("=" * 72)
+        print("WARNING: SINGLE-CORE MACHINE — ACCEPTANCE CRITERIA NOT "
+              "APPLICABLE")
+        print("  Both proc-vs-thread criteria need real parallelism: on one")
+        print("  core the proc backend cannot beat threads by construction")
+        print("  (cpu cell), and the spin/flag handshake itself has nowhere")
+        print("  to run (sleep cell). Measured ratios are recorded honestly;")
+        print("  neither is asserted. acceptance.acceptance_applicable=false")
+        print("  in the JSON — re-run on a multicore machine (CI runners)")
+        print("  for numbers the >=2x / >=0.85x criteria apply to.")
+        print("=" * 72)
     layout = shm.SlabLayout(
         shm.SlabSpec(obs_shape=(8 * 8 + 4,), act_shape=(1,)), M)
     out = {
@@ -132,7 +140,11 @@ def main(argv=None):
         "acceptance": {
             # both criteria need real parallelism: on one core the proc
             # backend cannot beat threads by construction (cpu cell), and
-            # the flag handshake itself has nowhere to run (sleep cell)
+            # the flag handshake itself has nowhere to run (sleep cell).
+            # acceptance_applicable is THE machine-applicability bit readers
+            # should key on (multicore_criteria_applicable kept as an alias
+            # for earlier consumers of this artifact)
+            "acceptance_applicable": multicore,
             "multicore_criteria_applicable": multicore,
             "cpu_proc_ge_2x_thread": cpu_ok if multicore else None,
             "sleep_proc_ge_0p85x_thread": sleep_ok if multicore else None,

@@ -549,16 +549,35 @@ def _host_sync(ctx: ModuleContext) -> Iterator[Finding]:
                 f"bug class); batch the fetch outside the loop")
 
 
+_REPRO_BLOCKING_CALLS = {"spin_until", "wait_fragments"}
+
+
 @rule("BLOCKING-NO-TIMEOUT",
       "blocking queue/thread call without a timeout in threaded code")
 def _blocking_no_timeout(ctx: ModuleContext) -> Iterator[Finding]:
-    if not ctx.has_threading_imports:
-        return
     for node in ast.walk(ctx.tree):
         if not isinstance(node, ast.Call):
             continue
         kwnames = {kw.arg for kw in node.keywords}
         if "timeout" in kwnames:
+            continue
+        # this repo's own cross-process waits (shm.spin_until, the async
+        # tier's AsyncRollouts.wait_fragments) declare timeout kw-only for
+        # exactly this reason — a call without it spins forever on a dead
+        # peer. Checked regardless of the import gate: these names only
+        # exist in the shared-memory layer, where the hazard is inherent.
+        fname = (node.func.id if isinstance(node.func, ast.Name)
+                 else node.func.attr if isinstance(node.func, ast.Attribute)
+                 else None)
+        if fname in _REPRO_BLOCKING_CALLS:
+            yield ctx.finding(
+                "BLOCKING-NO-TIMEOUT", node,
+                f"{fname}() without timeout= — this wait spins on another "
+                f"process's progress (actor/learner slab handshake); a "
+                f"dead peer turns it into a livelock. The timeout turns "
+                f"that into a diagnosable error")
+            continue
+        if not ctx.has_threading_imports:
             continue
         # bare `wait(object_list)` from-imported from
         # multiprocessing.connection — blocks until a connection is ready

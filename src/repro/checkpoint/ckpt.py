@@ -151,6 +151,31 @@ def latest(directory: str) -> Optional[str]:
     return os.path.join(directory, f"step_{s[-1]}") if s else None
 
 
+def step_of(path: str) -> int:
+    """The step a committed checkpoint was saved at, from its own metadata.
+
+    Reads ``index.json`` (``save`` always records ``"step"``), falling back
+    to the ``step_N`` basename for pre-metadata checkpoints. Never parses
+    the surrounding directory path — a manually named dir (``best_model_v2``)
+    or an underscored ``ckpt_dir`` must not change the answer."""
+    try:
+        with open(os.path.join(path, "index.json")) as f:
+            step = json.load(f).get("step")
+        if step is not None:
+            return int(step)
+    except (OSError, ValueError):
+        pass
+    base = os.path.basename(os.path.normpath(path))
+    if base.startswith("step_"):
+        try:
+            return int(base[len("step_"):])
+        except ValueError:
+            pass
+    raise ValueError(
+        f"cannot determine the step of checkpoint {path!r}: no 'step' in "
+        f"index.json and basename is not of the form step_<N>")
+
+
 def _gc(directory: str, keep: int):
     for s in _steps(directory)[:-keep]:
         shutil.rmtree(os.path.join(directory, f"step_{s}"),

@@ -177,7 +177,7 @@ class TrainConfig:
 
     # training engine (rl/engine.py)
     updates_per_launch: int = 1      # K: fused updates per host dispatch
-    engine_backend: str = "jit"      # jit | shard_map | pool | host
+    engine_backend: str = "jit"      # jit | shard_map | pool | host | async
     host_recv_timeout: float = 60.0  # host tier: bound on one first-finisher
                                      # batch (turns a hung worker into an
                                      # error instead of a deadlocked run)
@@ -185,6 +185,24 @@ class TrainConfig:
                                      # releasing C/sleep steps) | "proc"
                                      # (pure-Python steps; shared-memory
                                      # spawn processes — core/host.py)
+
+    # async actor–learner tier (distributed/actor_learner.py)
+    num_actors: int = 2              # spawn actor processes
+    shards_per_actor: int = 1        # env shards per actor (num_shards =
+                                     # num_actors * shards_per_actor)
+    actor_slots: int = 2             # fragment ring depth per shard; small
+                                     # on purpose — backpressure bounds how
+                                     # stale an actor's next fragment can be
+    max_staleness: int = 2           # versions; fragments older than this are
+                                     # dropped ("drop") or importance-clipped
+                                     # ("vtrace") per staleness_mode
+    staleness_mode: str = "drop"     # drop | vtrace
+    vtrace_rho: float = 1.0          # rho-bar clamp (vtrace mode)
+    vtrace_c: float = 1.0            # c-bar clamp (vtrace mode)
+    async_recv_timeout: float = 120.0  # bound on waiting for one update's
+                                       # fragments (hang -> error)
+    actor_jitter_ms: float = 0.0     # injected per-step actor latency
+                                     # (benchmarks / fault injection)
 
     # fault tolerance
     checkpoint_every: int = 100

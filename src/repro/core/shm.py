@@ -136,6 +136,23 @@ class SpinWait:
         self._sleep = min(self._sleep * 2, cap / 1e6)
 
 
+def spin_until(pred: Callable[[], bool], spin: SpinConfig = None, *,
+               timeout: float) -> bool:
+    """Busy-wait the ladder until ``pred()`` is truthy; returns False on
+    timeout. The ``timeout`` is mandatory by design — every shared-memory
+    wait in this codebase must be bounded (a dead peer otherwise turns a
+    spin into a deadlocked run; the analysis BLOCKING-NO-TIMEOUT rule
+    enforces the same at lint time)."""
+    w = SpinWait(spin or SpinConfig())
+    deadline = time.monotonic() + timeout
+    while True:
+        if pred():
+            return True
+        if time.monotonic() > deadline:
+            return False
+        w.pause()
+
+
 def _section(offset: int, shape, dtype) -> Tuple[int, int]:
     n = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
     start = ((offset + _ALIGN - 1) // _ALIGN) * _ALIGN

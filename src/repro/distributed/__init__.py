@@ -1,1 +1,25 @@
-from repro.distributed import sharding
+# Distributed layer: sharding rules, fault tolerance, and the async
+# actor–learner topology.
+#
+# Submodules load lazily (PEP 562, same rule as repro.core): the async
+# tier's spawn actors import `repro.distributed.actor_learner` in a fresh
+# interpreter, and this package __init__ must not drag in jax on their
+# behalf (sharding is jax-heavy; actor_learner/fault are importable
+# jax-free). `from repro.distributed import sharding` still works — the
+# attribute access routes through __getattr__ below.
+
+_SUBMODULES = ("sharding", "fault", "actor_learner")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name):
+    import importlib
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.distributed.{name}")
+    raise AttributeError(
+        f"module 'repro.distributed' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -20,9 +20,22 @@ def main():
                     help="run the env-conformance harness on the --ocean "
                          "env(s) instead of training; exit 1 on violations")
     ap.add_argument("--engine-backend", default=None,
-                    choices=("jit", "shard_map", "pool", "host"),
+                    choices=("jit", "shard_map", "pool", "host", "async"),
                     help="TrainEngine tier (default: jit for --ocean; "
-                         "--host-env always runs the host tier)")
+                         "--host-env always runs the host tier; 'async' is "
+                         "the actor–learner split: spawn actors stream "
+                         "rollout fragments, the learner consumes at its "
+                         "own rate)")
+    ap.add_argument("--num-actors", type=int, default=None,
+                    help="async tier: spawn actor processes (default 2)")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="async tier: max learner-version lag before a "
+                         "fragment is dropped/importance-clipped (default 2)")
+    ap.add_argument("--staleness-mode", default=None,
+                    choices=("drop", "vtrace"),
+                    help="async tier: stale-fragment policy — 'drop' "
+                         "discards, 'vtrace' keeps them under truncated "
+                         "importance weights (default drop)")
     ap.add_argument("--host-env", default=None,
                     help="host-mirror env name(s, comma-separated) or 'all' "
                          "(envs/ocean_host.py registry), trained through "
@@ -75,6 +88,24 @@ def main():
 
     if args.conformance and not args.ocean:
         ap.error("--conformance requires --ocean <name(s)|all>")
+
+    async_overrides = {
+        k: v for k, v in (("num_actors", args.num_actors),
+                          ("max_staleness", args.max_staleness),
+                          ("staleness_mode", args.staleness_mode))
+        if v is not None}
+    if async_overrides and args.engine_backend != "async":
+        ap.error("--num-actors/--max-staleness/--staleness-mode are async-"
+                 "tier knobs; pass --engine-backend async")
+    if args.engine_backend == "async":
+        if args.updates_per_launch != 1:
+            ap.error("-K/--updates-per-launch is a fused-scan knob; the "
+                     "async tier's learner consumes one fragment batch per "
+                     "update (K=1)")
+        if args.selfplay:
+            ap.error("--selfplay drives the device-resident tiers (frozen "
+                     "opponents live in the fused update); the async tier "
+                     "does not ship opponent params through the slab")
 
     if args.host_env or args.engine_backend == "host":
         # third-party host envs through the bridge, async host tier
@@ -161,17 +192,27 @@ def main():
             else [n.strip() for n in args.ocean.split(",")]
         for name in names:
             p = preset(name)
+            backend = args.engine_backend or "jit"
             tcfg = ocean_tcfg(name, checkpoint_dir=args.ckpt_dir,
-                              engine_backend=args.engine_backend or "jit",
+                              engine_backend=backend,
                               updates_per_launch=args.updates_per_launch,
-                              checkpoint_every=args.save_every)
+                              checkpoint_every=args.save_every,
+                              **async_overrides)
             tr = Trainer(OCEAN[name](), tcfg, hidden=p.hidden,
                          recurrent=p.recurrent, conv=p.conv, seed=args.seed)
             steps = args.total_env_steps or p.total_steps
-            print(f"=== {name} (recurrent={p.recurrent}) ===")
-            m = tr.train(steps, log_every=10, target_score=p.target_score,
-                         checkpoint_dir=os.path.join(args.ckpt_dir, name),
-                         resume=args.resume)
+            extra = (f" actors={tcfg.num_actors} "
+                     f"staleness={tcfg.staleness_mode}<={tcfg.max_staleness}"
+                     if backend == "async" else "")
+            print(f"=== {name} (recurrent={p.recurrent}{extra}) ===")
+            try:
+                m = tr.train(steps, log_every=10,
+                             target_score=p.target_score,
+                             checkpoint_dir=os.path.join(args.ckpt_dir,
+                                                         name),
+                             resume=args.resume)
+            finally:
+                tr.engine.close()      # async tier: actor procs + slab
             if not m:
                 print("  -> resumed past the step budget; nothing to do")
                 continue

@@ -9,7 +9,7 @@ shape ``(K, n_metrics)`` that is fetched once per launch — dispatch latency
 and host sync amortize K-fold, which is exactly what dominates the
 small-unroll Ocean regime the paper benchmarks.
 
-Four execution tiers behind one ``run(total_steps)`` API:
+Five execution tiers behind one ``run(total_steps)`` API:
 
   * ``jit``       — single device; K = 1 is the classic one-update-per-
                     dispatch loop, K > 1 the fused multi-update scan.
@@ -35,6 +35,17 @@ Four execution tiers behind one ``run(total_steps)`` API:
                     pool's ``env_ids``, so GAE bootstraps and recurrent
                     carries stay per-env correct even though every batch is
                     a different first-finisher subset.
+  * ``async``     — decoupled actor–learner (distributed/actor_learner.py):
+                    N spawn-actor processes run jitted rollouts over
+                    disjoint env shards and stream version-tagged fragments
+                    through a shared-memory slab; the learner batches one
+                    fragment per shard, applies the staleness policy
+                    (``tcfg.staleness_mode``: drop stale fragments, or keep
+                    them under V-trace rho/c clamps), learns, and
+                    seqlock-publishes the new params version. The loop runs
+                    through distributed/fault.ResilientLoop (checkpointed
+                    kill-and-resume), dead actors are resharded to
+                    survivors, and slow actors are straggler-flagged.
 
 Checkpointing, ``target_score`` early-exit, and metric logging fire at
 launch boundaries: with ``checkpoint_dir`` set, every
@@ -68,7 +79,7 @@ from repro.configs.base import TrainConfig
 from repro.core.vector import VecEnv
 from repro.distributed import sharding as shd
 from repro.rl.learner import (TrainState, init_train_state, make_ocean_learn,
-                              make_ocean_update)
+                              make_ocean_update, make_vtrace_adv)
 from repro.rl.rollout import RolloutCarry, Trajectory
 
 
@@ -132,9 +143,10 @@ class TrainEngine:
         self.env, self.policy, self.tcfg, self.dist = env, policy, tcfg, dist
         self.backend = backend or tcfg.engine_backend
         self.K = updates_per_launch or tcfg.updates_per_launch
-        if self.backend not in ("jit", "shard_map", "pool", "host"):
+        if self.backend not in ("jit", "shard_map", "pool", "host", "async"):
             raise ValueError(f"unknown engine backend {self.backend!r}; "
-                             f"expected jit | shard_map | pool | host")
+                             f"expected jit | shard_map | pool | host | "
+                             f"async")
         if self.K < 1:
             raise ValueError(f"updates_per_launch must be >= 1, got {self.K}")
         self.key = key
@@ -190,6 +202,45 @@ class TrainEngine:
             self._learn = jax.jit(make_ocean_learn(
                 policy, tcfg, dist, kernel_mode=kernel_mode))
             self._act = jax.jit(self._make_act())
+            return
+        if self.backend == "async":
+            if self.K != 1:
+                raise ValueError(
+                    f"updates_per_launch={self.K} is a fused-scan knob; the "
+                    f"async tier dispatches one update per fragment batch "
+                    f"(K=1)")
+            if tcfg.staleness_mode not in ("drop", "vtrace"):
+                raise ValueError(
+                    f"staleness_mode={tcfg.staleness_mode!r}; expected "
+                    f"'drop' (discard fragments older than max_staleness) "
+                    f"or 'vtrace' (importance-clip them)")
+            for attr in ("init", "step", "reset"):
+                if not hasattr(env, attr):
+                    raise ValueError(
+                        "backend='async' takes a pure-functional (Emulated) "
+                        f"env whose actors rebuild it in-process, got "
+                        f"{type(env).__name__} without {attr!r}")
+            from types import SimpleNamespace
+            from repro.distributed.actor_learner import AsyncRollouts
+            A = getattr(env, "num_agents", 1)
+            # host-side batch bookkeeping only — the real VecEnvs live in
+            # the actor processes, one per shard
+            self.vec = SimpleNamespace(batch_size=tcfg.num_envs * A,
+                                       num_envs=tcfg.num_envs, num_agents=A)
+            self.rc = None
+            self.num_shards = 1
+            adv = (make_vtrace_adv(policy, dist, tcfg,
+                                   rho_clip=tcfg.vtrace_rho,
+                                   c_clip=tcfg.vtrace_c)
+                   if tcfg.staleness_mode == "vtrace" else None)
+            self._learn = jax.jit(make_ocean_learn(
+                policy, tcfg, dist, kernel_mode=kernel_mode, adv_fn=adv))
+            seed = int(np.asarray(jax.random.randint(
+                jax.random.fold_in(key, 1), (), 0, 2**31 - 1)))
+            self.rollouts = AsyncRollouts(env, policy, dist, tcfg,
+                                          params0=self.ts.params, seed=seed)
+            self._dropped = 0
+            self._version = 0
             return
         if self.backend == "pool":
             if self.K != 1:
@@ -402,6 +453,9 @@ class TrainEngine:
         if self.backend == "host":
             return self._run_host(total_steps, target_score=target_score,
                                   on_update=on_update, on_launch=on_launch)
+        if self.backend == "async":
+            return self._run_async(total_steps, target_score=target_score,
+                                   on_update=on_update, on_launch=on_launch)
         spu = self.steps_per_update
         num_updates = max(1, total_steps // spu)
         history, pending, solved = [], deque(), None
@@ -562,12 +616,118 @@ class TrainEngine:
         self._join_checkpoint()
         return history, st["solved"]
 
+    # -- async actor–learner tier ----------------------------------------------
+    def _collect_fragments(self, nf: int) -> list:
+        """``nf`` fresh-enough fragments from the actor pool. In drop mode,
+        fragments older than ``max_staleness`` learner versions are
+        discarded before batching (the actors keep producing, so this
+        converges); in vtrace mode every fragment batches and the
+        importance clamps in the learn program do the correcting."""
+        tcfg = self.tcfg
+        out = []
+        while len(out) < nf:
+            got = self.rollouts.wait_fragments(
+                nf - len(out), timeout=tcfg.async_recv_timeout)
+            for f in got:
+                if (tcfg.staleness_mode == "drop"
+                        and self._version - f.version > tcfg.max_staleness):
+                    self._dropped += 1
+                    continue
+                out.append(f)
+        return out
+
+    def _run_async(self, total_steps, *, target_score=None, on_update=None,
+                   on_launch=None):
+        """The learner half of the actor–learner split, run through the
+        (recovery-correct) ResilientLoop: collect one update's worth of
+        fragments from the slab, learn, publish the new params version.
+        Fragments are a live stream — ResilientLoop's iterator contract —
+        so recovery retries the current batch and only restores a
+        checkpoint that sits exactly at ``steps_done``. Checkpoints are the
+        engine's standard {ts, key, update} tree, so ``restore()`` +
+        ``run()`` resumes a killed learner step-count-correctly (actors
+        re-seed from the published params like the pool/host tiers
+        re-seed their env state)."""
+        from repro.distributed.actor_learner import stack_fragments
+        from repro.distributed.fault import ResilientLoop
+        tcfg, ro = self.tcfg, self.rollouts
+        spu = self.steps_per_update
+        num_updates = max(1, total_steps // spu)
+        nf = ro.spec.num_shards           # fragments per update = one pass
+                                          # over every env shard's batch rows
+        history, st = [], {"solved": None}
+        t0 = time.perf_counter()
+        done_before = self._resume_update * spu
+
+        self._version = self._resume_update
+        ro.publish(self.ts.params, self._version)
+
+        def step_fn(state, frags):
+            traj, last_value = stack_fragments(frags)
+            key, kp = jax.random.split(state["key"])
+            ts, m = self._learn(state["ts"], None, traj, last_value, kp)
+            u = int(state["update"]) + 1
+            # publish inside the step: np.asarray on a poisoned update
+            # raises *before* the slab is touched (see AsyncRollouts
+            # .publish), so actors only ever see committed params
+            ro.publish(ts.params, u)
+            return ({"ts": ts, "key": key,
+                     "update": np.asarray(u, np.int64)}, m)
+
+        loop = ResilientLoop(
+            step_fn, self.checkpoint_dir,
+            save_every=(tcfg.checkpoint_every
+                        if self.checkpoint_dir is not None else 0),
+            async_save=True, keep=tcfg.keep_checkpoints)
+        loop.steps_done = self._resume_update
+        state = {"ts": self.ts, "key": self.key,
+                 "update": np.asarray(self._resume_update, np.int64)}
+
+        def frag_stream():
+            while loop.steps_done < num_updates and st["solved"] is None:
+                batch = self._collect_fragments(nf)
+                self._last_ages = [self._version - f.version for f in batch]
+                yield batch
+
+        def on_metrics(u, m):
+            self._version = ro.version    # published by step_fn
+            md = {k: float(np.asarray(v)) for k, v in m.items()}
+            md["env_steps"] = u * spu
+            md["sps"] = ((md["env_steps"] - done_before)
+                         / (time.perf_counter() - t0))
+            ages = getattr(self, "_last_ages", [])
+            md["frag_age_mean"] = (float(np.mean(ages)) if ages else 0.0)
+            md["frag_age_max"] = (float(np.max(ages)) if ages else 0.0)
+            md["dropped_fragments"] = self._dropped
+            md["stragglers"] = int(np.sum(ro.straggler_flags))
+            md["actors_alive"] = len(ro.alive_actors())
+            md["reshards"] = len(ro.events)
+            history.append(md)
+            if on_update is not None:
+                on_update(u - 1, md)
+            if on_launch is not None:
+                on_launch(u)
+            if (target_score is not None and st["solved"] is None
+                    and md["episodes"] > 0 and md["score"] >= target_score):
+                st["solved"] = md
+
+        state = loop.run(state, frag_stream(), on_metrics=on_metrics)
+        self.ts, self.key = state["ts"], state["key"]
+        self._resume_update = self._saved_upto = int(state["update"])
+        if self.checkpoint_dir is not None:
+            # final commit: kill-then-resume ends at the same step count
+            # (and params) as an uninterrupted run
+            self.save_checkpoint(self._resume_update, async_=False)
+        return history, st["solved"]
+
     # -- host tier -------------------------------------------------------------
     def close(self):
-        """Release host-side resources (the host tier's worker threads, or
-        its worker processes + shared-memory slab under backend="proc")."""
+        """Release host-side resources (the host tier's worker threads or
+        processes, or the async tier's actor processes + slab)."""
         if self.backend == "host":
             self.hvec.close()
+        if self.backend == "async":
+            self.rollouts.close()
 
     def _run_host(self, total_steps, *, target_score=None, on_update=None,
                   on_launch=None):

@@ -63,9 +63,53 @@ def _check_divisible(n, M, num_envs, num_minibatches, unroll_length, what):
             f"so each PPO minibatch has the same size")
 
 
+def make_vtrace_adv(policy, dist, tcfg: TrainConfig,
+                    rho_clip: float = 1.0, c_clip: float = 1.0):
+    """V-trace advantage/target computation (IMPALA) for the async tier's
+    off-policy fragments: truncated importance weights correct for the
+    policy-version lag between the actor that produced a fragment and the
+    learner consuming it. Plugs into ``make_ocean_learn(adv_fn=...)``.
+
+    rho/c are computed per sample as exp(logpi_current − logpi_behavior)
+    and clamped at ``rho_clip`` / ``c_clip``; on-policy fragments give
+    rho = c = 1 exactly, so the estimator degrades to one-step-λ=1 GAE-like
+    targets as staleness → 0. Non-recurrent policies only (the fragment
+    slab does not ship carries)."""
+    if policy.recurrent:
+        raise ValueError("make_vtrace_adv supports non-recurrent policies "
+                         "(fragments carry no recurrent state)")
+
+    def adv_fn(params, traj, last_value):
+        # one forward pass under the *current* policy over the whole batch
+        logits, values, _ = policy.seq(params, traj.obs, None, traj.resets)
+        newlogp = dist.log_prob(logits, traj.actions)
+        rho = jnp.exp(newlogp - traj.logprobs)
+        rho_c = jnp.minimum(rho, rho_clip)
+        c = jnp.minimum(rho, c_clip)
+        nd = 1.0 - traj.dones.astype(jnp.float32)     # no bootstrap across
+        v_next = jnp.concatenate([values[1:], last_value[None]], axis=0)
+        delta = rho_c * (traj.rewards + tcfg.gamma * v_next * nd - values)
+
+        def back(acc, x):
+            d_t, c_t, nd_t = x
+            acc = d_t + tcfg.gamma * nd_t * c_t * acc
+            return acc, acc
+
+        _, vs_minus_v = jax.lax.scan(back, jnp.zeros_like(last_value),
+                                     (delta, c, nd), reverse=True)
+        vs = values + vs_minus_v
+        vs_next = jnp.concatenate([vs[1:], last_value[None]], axis=0)
+        adv = rho_c * (traj.rewards + tcfg.gamma * vs_next * nd - values)
+        # vs are the value targets; both are fixed targets for the PPO
+        # epochs (computed once from pre-update params, like GAE)
+        return jax.lax.stop_gradient(adv), jax.lax.stop_gradient(vs)
+
+    return adv_fn
+
+
 def make_ocean_learn(policy, tcfg: TrainConfig, dist,
                      kernel_mode: str = None, axis_name=None,
-                     num_shards: int = 1):
+                     num_shards: int = 1, adv_fn=None):
     """The post-rollout half of the fused update: GAE → minibatched
     clipped-PPO epochs. Returns jit-able
     ``learn(ts, carry0, traj, last_value, key) → (ts, metrics)``.
@@ -86,6 +130,11 @@ def make_ocean_learn(policy, tcfg: TrainConfig, dist,
     update semantically identical (up to float reduction order) whether it
     runs on 1 device or S — the seed-matched multi-device parity the
     engine's tests and benchmark rely on.
+
+    ``adv_fn`` — optional ``(params, traj, last_value) -> (adv, returns)``
+    replacing the on-policy GAE (e.g. ``make_vtrace_adv`` for the async
+    tier's off-policy fragments). Computed once per update from the
+    pre-update params, exactly where GAE runs.
     """
     E, M = tcfg.update_epochs, tcfg.num_minibatches
     S = num_shards
@@ -94,10 +143,13 @@ def make_ocean_learn(policy, tcfg: TrainConfig, dist,
         T, B = traj.rewards.shape                       # local shapes
         B_global = B * (S if axis_name is not None else 1)
 
-        adv = kops.gae(traj.rewards.T, traj.values.T, traj.dones.T,
-                       last_value, tcfg.gamma, tcfg.gae_lambda,
-                       mode=kernel_mode).T                     # (T, B)
-        returns = adv + traj.values
+        if adv_fn is None:
+            adv = kops.gae(traj.rewards.T, traj.values.T, traj.dones.T,
+                           last_value, tcfg.gamma, tcfg.gae_lambda,
+                           mode=kernel_mode).T                 # (T, B)
+            returns = adv + traj.values
+        else:
+            adv, returns = adv_fn(ts.params, traj, last_value)
 
         if policy.recurrent:
             # minibatch over envs; recompute through full sequences

@@ -8,3 +8,7 @@ def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running training tests")
     config.addinivalue_line(
         "markers", "multi_device: needs/forces a multi-device host")
+    config.addinivalue_line(
+        "markers", "timeout(seconds): per-test wall-clock bound, enforced "
+        "by pytest-timeout (the CI distributed lane); inert without the "
+        "plugin")

@@ -146,6 +146,30 @@ def test_blocking_bare_wait_from_import_flagged():
     assert "BLOCKING-NO-TIMEOUT" in _rules(fs)
 
 
+def test_blocking_repro_waits_need_timeout_kwarg():
+    """The repo's own cross-process waits (shm.spin_until, the async
+    tier's wait_fragments) are covered — with or without the stdlib
+    import gate, as a method or a bare call."""
+    fs = check_source(_src("""
+        from repro.core import shm
+
+        def drain(ro, pred):
+            shm.spin_until(pred)                 # no timeout
+            frags = ro.wait_fragments(4)         # no timeout
+            return frags
+    """))
+    assert sum(f.rule == "BLOCKING-NO-TIMEOUT" for f in fs) == 2
+
+    fs = check_source(_src("""
+        from repro.core.shm import spin_until
+
+        def drain(ro, pred):
+            spin_until(pred, timeout=5.0)
+            return ro.wait_fragments(4, timeout=60.0)
+    """))
+    assert "BLOCKING-NO-TIMEOUT" not in _rules(fs)
+
+
 def test_nondet_in_pure_on_time_call():
     fs = check_source(_src("""
         import time

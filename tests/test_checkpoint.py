@@ -66,6 +66,212 @@ def test_resilient_loop_recovers(tmp_path):
     assert loop.steps_done == 4
 
 
+def test_resilient_loop_rewinds_past_checkpoint_gap(tmp_path):
+    """Regression for the recovery desync: with save_every > 1, a failure k
+    steps past the last checkpoint must restore AND rewind — replaying
+    batches S..S+k on the restored lineage — not resume the *restored*
+    state at the *pre-failure* step count (which silently dropped the k
+    replayed batches' worth of progress)."""
+    from repro.distributed.fault import ResilientLoop
+    calls = {"n": 0}
+    applied = []
+
+    def step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 6:            # step 6 = 2 past the step-4 checkpoint
+            raise RuntimeError("injected failure at S+2")
+        return {"x": state["x"] + batch}, {"x_after": float(state["x"]) + 1}
+
+    def on_metrics(step_no, m):
+        applied.append((step_no, m["x_after"]))
+
+    loop = ResilientLoop(step, str(tmp_path), save_every=2, async_save=False)
+    out = loop.run({"x": jnp.zeros(())}, [jnp.ones(())] * 8,
+                   on_metrics=on_metrics)
+    assert loop.recoveries == 1
+    assert float(out["x"]) == 8.0      # every batch applied exactly once
+    assert loop.steps_done == 8
+    # steps 5..8 re-fire after the rewind to the step-4 checkpoint, and the
+    # state each one observes matches the uninterrupted lineage
+    assert applied == [(s, float(s)) for s in
+                       [1, 2, 3, 4, 5, 5, 6, 7, 8]]
+
+
+def test_resilient_loop_replayable_callable_source(tmp_path):
+    """callable(start)->iterator sources replay from the restored step."""
+    from repro.distributed.fault import ResilientLoop
+    calls = {"n": 0}
+    starts = []
+
+    def batches(start):
+        starts.append(start)
+        return (jnp.ones(()) for _ in range(start, 6))
+
+    def step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 4:
+            raise RuntimeError("injected")
+        return {"x": state["x"] + batch}, {}
+
+    loop = ResilientLoop(step, str(tmp_path), save_every=3, async_save=False)
+    out = loop.run({"x": jnp.zeros(())}, batches)
+    assert float(out["x"]) == 6.0 and loop.steps_done == 6
+    assert starts == [0, 3]            # recovery re-invoked it at the ckpt
+
+
+def test_resilient_loop_live_stream_retries_in_place(tmp_path):
+    """A bare iterator cannot rewind: recovery retries the *current* batch
+    and only restores a checkpoint sitting exactly at steps_done."""
+    from repro.distributed.fault import ResilientLoop
+    calls = {"n": 0}
+
+    def step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 3:            # fails on stream item 3, ckpt at 2
+            raise RuntimeError("injected")
+        return {"x": state["x"] + batch}, {}
+
+    loop = ResilientLoop(step, str(tmp_path), save_every=2, async_save=False)
+    out = loop.run({"x": jnp.zeros(())}, iter([jnp.ones(())] * 4))
+    assert loop.recoveries == 1
+    assert float(out["x"]) == 4.0      # no stream item skipped or doubled
+    assert loop.steps_done == 4
+
+
+def test_resilient_loop_poison_pill_aborts(tmp_path):
+    from repro.distributed.fault import ResilientLoop
+
+    def step(state, batch):
+        raise RuntimeError("always fails")
+
+    loop = ResilientLoop(step, str(tmp_path), save_every=1, max_retries=2,
+                         async_save=False)
+    with pytest.raises(RuntimeError, match="poison pill"):
+        loop.run({"x": jnp.zeros(())}, [jnp.ones(())] * 3)
+    assert loop.recoveries == 3        # max_retries failures + the fatal one
+
+
+def test_resilient_loop_async_save_joins_before_next(tmp_path, monkeypatch):
+    """Overlapping async saves serialize: the previous handle joins before
+    the next save starts (and the final handle joins before run returns)."""
+    from repro.distributed import fault
+    log = []
+
+    class Handle:
+        def __init__(self, step):
+            self.step = step
+
+        def join(self):
+            log.append(("join", self.step))
+
+    def fake_save(d, state, step, async_=False, keep=None):
+        log.append(("save", step))
+        assert async_
+        return Handle(step)
+
+    monkeypatch.setattr(fault.ckpt, "save", fake_save)
+    loop = fault.ResilientLoop(lambda s, b: (s, {}), str(tmp_path),
+                               save_every=1, async_save=True)
+    loop.run({"x": jnp.zeros(())}, [jnp.ones(())] * 3)
+    assert log == [("save", 1), ("join", 1), ("save", 2), ("join", 2),
+                   ("save", 3), ("join", 3)]
+
+
+def test_resume_from_underscored_and_renamed_dirs(tmp_path):
+    """Step parsing comes from checkpoint metadata (index.json), so
+    underscored ckpt_dir basenames and manually renamed checkpoint dirs
+    resume correctly (path.rsplit('_') misread both)."""
+    from repro.distributed.fault import ResilientLoop
+    t = _tree()
+    d = tmp_path / "run_v2_final"      # underscores in the parent dir name
+    ckpt.save(str(d), t, step=12)
+    state, step = ResilientLoop(lambda s, b: (s, {}), str(d)).resume_or_init(
+        jax.tree.map(jnp.zeros_like, t))
+    assert step == 12
+
+    # a committed checkpoint renamed to something that isn't step_N at all
+    src = ckpt.latest(str(d))
+    dst = tmp_path / "best_model_final"
+    os.rename(src, dst)
+    state, step = ResilientLoop(lambda s, b: (s, {}),
+                                str(dst)).resume_or_init(
+        jax.tree.map(jnp.zeros_like, t))
+    assert step == 12
+    np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+    assert ckpt.step_of(str(dst)) == 12
+
+
+def test_true_median_and_straggler_flagging():
+    """Even-length windows use the true median (mean of the two middles);
+    the upper-middle shortcut inflated the k x median threshold and
+    under-flagged genuinely slow steps."""
+    from repro.distributed.fault import StragglerMonitor, _true_median
+    assert _true_median([]) == 0.0
+    assert _true_median([3.0]) == 3.0
+    assert _true_median([1.0, 1.0, 3.0]) == 1.0
+    assert _true_median([1.0, 1.0, 3.0, 3.0]) == 2.0
+
+    mon = StragglerMonitor(window=8, k=2.0, min_samples=4)
+    for dt in (1.0, 1.0, 3.0):
+        assert not mon.record(dt)
+    # window [1, 1, 3, 4.2]: true median 2.0 -> threshold 4.0 -> flagged;
+    # the upper-middle (3.0 -> threshold 6.0) would have missed it
+    assert mon.record(4.2)
+    assert mon.flagged == 1
+    assert mon.median == pytest.approx(2.0)
+
+
+def test_straggler_flag_propagates_into_metrics(tmp_path):
+    """A slow step's metrics dict gains straggler_flag=True on its way to
+    on_metrics (the launcher's re-shard/alert signal)."""
+    from repro.distributed.fault import ResilientLoop, StragglerMonitor
+    seen = []
+    loop = ResilientLoop(lambda s, b: (s, {"loss": 0.0}), None, save_every=0)
+    loop.monitor = StragglerMonitor(window=8, k=1e-9, min_samples=1)
+    loop.run({"x": jnp.zeros(())}, [jnp.ones(())] * 2,
+             on_metrics=lambda u, m: seen.append(m))
+    assert all(m.get("straggler_flag") for m in seen[1:])
+    assert loop.monitor.flagged >= 1
+
+
+RESUME_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, sys
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.checkpoint import ckpt
+from repro.distributed.fault import ResilientLoop
+
+d = sys.argv[1]
+mesh1 = jax.make_mesh((8,), ("x",))
+w = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                   NamedSharding(mesh1, P("x", None)))
+ckpt.save(d, {"w": w}, step=5)
+
+# resume onto a DIFFERENT mesh: ResilientLoop(shardings=...) places the
+# restored leaves (elastic recovery, 8 -> 2x4)
+mesh2 = jax.make_mesh((2, 4), ("a", "b"))
+sh = {"w": NamedSharding(mesh2, P(None, "b"))}
+loop = ResilientLoop(lambda s, b: (s, {}), d, shardings=sh)
+state, step = loop.resume_or_init({"w": jnp.zeros((8, 8))})
+assert step == 5, step
+np.testing.assert_array_equal(np.asarray(state["w"]),
+                              np.arange(64.0).reshape(8, 8))
+assert state["w"].sharding.is_equivalent_to(sh["w"], 2), state["w"].sharding
+print("RESUME_SHARDED_OK")
+"""
+
+
+def test_resume_or_init_onto_different_shardings(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", RESUME_SHARDED_SCRIPT,
+                          str(tmp_path)], capture_output=True, text=True,
+                         env=env, cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert "RESUME_SHARDED_OK" in out.stdout, out.stderr[-2000:]
+
+
 def test_resume_or_init(tmp_path):
     from repro.distributed.fault import ResilientLoop
     t = _tree()
