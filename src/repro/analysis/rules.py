@@ -758,3 +758,49 @@ def _impure_import(ctx: ModuleContext) -> Iterator[Finding]:
                 f"'{fi.qualname}' — host numpy under trace concretizes "
                 f"tracers (or bakes in constants) instead of staying in "
                 f"the XLA program; use jax.numpy")
+
+
+_TELEMETRY_MOD = "repro.telemetry"
+
+
+@rule("TELEMETRY-IN-JIT",
+      "telemetry span/registry/timer call inside a jit/scan-traced function")
+def _telemetry_in_jit(ctx: ModuleContext) -> Iterator[Finding]:
+    """Spans and metric updates are host-side side effects: under trace they
+    run ONCE at trace time, get baked out of the XLA program, and silently
+    record nothing on every replayed launch (worse: a span opened at trace
+    time measures compilation, not execution). Telemetry belongs on the host
+    side of the dispatch boundary — around the launch, never inside it."""
+
+    def telemetry_source(ch: Tuple[str, ...]) -> Optional[str]:
+        """The repro.telemetry module a call chain resolves to, or None."""
+        if not ch:
+            return None
+        root = ch[0]
+        mod = ctx.module_aliases.get(root)
+        if mod is not None and (mod == _TELEMETRY_MOD or
+                                mod.startswith(_TELEMETRY_MOD + ".")):
+            return mod
+        src = ctx.from_imports.get(root, "")
+        if root == "telemetry" and src == "repro":
+            return _TELEMETRY_MOD          # from repro import telemetry
+        if src == _TELEMETRY_MOD or src.startswith(_TELEMETRY_MOD + "."):
+            return src                     # from repro.telemetry import span
+        return None
+
+    for fi in ctx.traced_funcs():
+        for node in body_stmts(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            ch = dotted_chain(node.func)
+            src = telemetry_source(ch)
+            if src:
+                yield ctx.finding(
+                    "TELEMETRY-IN-JIT", node,
+                    f"telemetry call {'.'.join(ch)}() (from {src}) inside "
+                    f"traced function '{fi.qualname}' ({fi.trace_reason}) "
+                    f"— host-side spans/metrics under trace fire once at "
+                    f"trace time and are baked out of the compiled "
+                    f"program (every replayed launch records nothing); "
+                    f"move the instrumentation to the host side of the "
+                    f"dispatch boundary")

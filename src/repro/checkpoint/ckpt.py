@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
+from repro.telemetry import span as _span
+
 
 def _np_dtype(name: str):
     """Resolve dtype names incl. ml_dtypes customs (bfloat16, int4, ...)."""
@@ -84,41 +86,44 @@ def save(directory: str, tree, step: Optional[int] = None,
     tmp = final + ".tmp"
 
     # synchronous device→host snapshot (consistent view)
-    host = [np.asarray(l) if not hasattr(l, "addressable_shards")
-            else l for l in leaves]
-    shards = []
-    index = {"arrays": {}, "step": step}
-    for name, leaf in zip(names, host):
-        if hasattr(leaf, "addressable_shards"):
-            entry = {"shape": list(leaf.shape), "dtype": str(leaf.dtype),
-                     "shards": []}
-            for i, s in enumerate(leaf.addressable_shards):
-                fn = f"{name.replace('/', '.')}.{s.device.id}.npy"
-                entry["shards"].append(
-                    {"file": fn, "slice": _slice_spec(s.index, leaf.shape)})
-                shards.append((fn, _to_storable(np.asarray(s.data))))
-            index["arrays"][name] = entry
-        else:
-            arr = np.asarray(leaf)
-            fn = f"{name.replace('/', '.')}.full.npy"
-            index["arrays"][name] = {
-                "shape": list(arr.shape), "dtype": str(arr.dtype),
-                "shards": [{"file": fn,
-                            "slice": _slice_spec((slice(None),) * arr.ndim,
-                                                 arr.shape)}]}
-            shards.append((fn, _to_storable(arr)))
+    with _span("ckpt.snapshot"):
+        host = [np.asarray(l) if not hasattr(l, "addressable_shards")
+                else l for l in leaves]
+        shards = []
+        index = {"arrays": {}, "step": step}
+        for name, leaf in zip(names, host):
+            if hasattr(leaf, "addressable_shards"):
+                entry = {"shape": list(leaf.shape), "dtype": str(leaf.dtype),
+                         "shards": []}
+                for i, s in enumerate(leaf.addressable_shards):
+                    fn = f"{name.replace('/', '.')}.{s.device.id}.npy"
+                    entry["shards"].append(
+                        {"file": fn,
+                         "slice": _slice_spec(s.index, leaf.shape)})
+                    shards.append((fn, _to_storable(np.asarray(s.data))))
+                index["arrays"][name] = entry
+            else:
+                arr = np.asarray(leaf)
+                fn = f"{name.replace('/', '.')}.full.npy"
+                index["arrays"][name] = {
+                    "shape": list(arr.shape), "dtype": str(arr.dtype),
+                    "shards": [{"file": fn,
+                                "slice": _slice_spec(
+                                    (slice(None),) * arr.ndim, arr.shape)}]}
+                shards.append((fn, _to_storable(arr)))
 
     def _write():
-        os.makedirs(tmp, exist_ok=True)
-        for fn, arr in shards:
-            np.save(os.path.join(tmp, fn), arr)
-        with open(os.path.join(tmp, "index.json"), "w") as f:
-            json.dump(index, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)            # atomic commit
-        if keep is not None:
-            _gc(directory, keep)
+        with _span("ckpt.write"):
+            os.makedirs(tmp, exist_ok=True)
+            for fn, arr in shards:
+                np.save(os.path.join(tmp, fn), arr)
+            with open(os.path.join(tmp, "index.json"), "w") as f:
+                json.dump(index, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)        # atomic commit
+            if keep is not None:
+                _gc(directory, keep)
 
     if async_:
         t = threading.Thread(target=_write, daemon=True)
@@ -186,6 +191,11 @@ def restore(path_or_dir: str, like, shardings=None):
     """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs).
     ``shardings``: optional matching tree of jax.sharding.Sharding — shards
     are assembled per-device (reshard-on-restore)."""
+    with _span("ckpt.restore"):
+        return _restore(path_or_dir, like, shardings)
+
+
+def _restore(path_or_dir: str, like, shardings=None):
     path = path_or_dir
     if not os.path.exists(os.path.join(path, "index.json")):
         path = latest(path_or_dir)

@@ -51,6 +51,8 @@ from typing import Callable, List, Sequence
 import numpy as np
 
 from repro.core import shm as _shm
+from repro.telemetry import span as _span
+from repro.telemetry.procstats import HOST_FIELDS, StatSlab
 
 
 class HostEnv:
@@ -144,6 +146,9 @@ class HostPool:
         # ready item passes through recv exactly once, in per-env order)
         self._ep_return = np.zeros((self.M,), np.float64)
         self._ep_length = np.zeros((self.M,), np.int64)
+        self._stat_steps = 0
+        self._stat_episodes = 0
+        self._stat_recvs = 0
         for i, env in enumerate(self._envs):
             t = threading.Thread(target=self._worker, args=(i,), daemon=True)
             t.start()
@@ -204,24 +209,26 @@ class HostPool:
             timeout = self.recv_timeout
         deadline = None if timeout is None else time.monotonic() + timeout
         items = []
-        for _ in range(self.N):
-            try:
-                if deadline is None:
-                    # explicit timeout=None is a deliberate wait-forever
-                    it = self._ready.get()  # repro: noqa[BLOCKING-NO-TIMEOUT]
-                else:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0:
-                        raise queue.Empty
-                    it = self._ready.get(timeout=remaining)
-            except queue.Empty:
-                raise TimeoutError(
-                    f"HostPool.recv timed out after {timeout}s with "
-                    f"{len(items)}/{self.N} envs ready (slow or deadlocked "
-                    f"worker?)") from None
-            if isinstance(it, _WorkerFailure):
-                raise HostEnvError(it.env_index, it.op, it.exc) from it.exc
-            items.append(it)
+        with _span("host.recv"):
+            for _ in range(self.N):
+                try:
+                    if deadline is None:
+                        # explicit timeout=None: a deliberate wait-forever
+                        it = self._ready.get()  # repro: noqa[BLOCKING-NO-TIMEOUT]
+                    else:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            raise queue.Empty
+                        it = self._ready.get(timeout=remaining)
+                except queue.Empty:
+                    raise TimeoutError(
+                        f"HostPool.recv timed out after {timeout}s with "
+                        f"{len(items)}/{self.N} envs ready (slow or "
+                        f"deadlocked worker?)") from None
+                if isinstance(it, _WorkerFailure):
+                    raise HostEnvError(it.env_index, it.op,
+                                       it.exc) from it.exc
+                items.append(it)
         return self._assemble(items)
 
     def _assemble(self, items):
@@ -249,6 +256,7 @@ class HostPool:
         """Fold this batch into the per-env accumulators and emit the
         fixed-shape terminal-info rows (valid == done)."""
         n = len(items)
+        self._stat_recvs += 1
         score = np.zeros((n,), np.float32)
         ep_ret = np.zeros((n,), np.float32)
         ep_len = np.zeros((n,), np.int32)
@@ -258,7 +266,9 @@ class HostPool:
                 continue                        # initial reset: not a step
             self._ep_return[i] += float(np.sum(rew))
             self._ep_length[i] += 1
+            self._stat_steps += 1
             if done:
+                self._stat_episodes += 1
                 valid[j] = True
                 ep_ret[j] = self._ep_return[i]
                 ep_len[j] = self._ep_length[i]
@@ -273,19 +283,28 @@ class HostPool:
         """Queue one step per env. Bounded: an unbounded ``put`` on the
         size-1 inbox of a worker that died mid-step blocked forever; now the
         put re-checks worker liveness and raises ``HostEnvError`` instead."""
-        for a, i in zip(np.asarray(actions), env_ids):
-            i = int(i)
-            while True:
-                try:
-                    self._inboxes[i].put(("step", a), timeout=0.05)
-                    break
-                except queue.Full:
-                    if self._stop:
-                        return                  # pool is closing; drop
-                    if not self._threads[i].is_alive():
-                        raise HostEnvError(i, "send", RuntimeError(
-                            "worker thread is dead and its inbox is full; "
-                            "command undeliverable")) from None
+        with _span("host.send"):
+            for a, i in zip(np.asarray(actions), env_ids):
+                i = int(i)
+                while True:
+                    try:
+                        self._inboxes[i].put(("step", a), timeout=0.05)
+                        break
+                    except queue.Full:
+                        if self._stop:
+                            return              # pool is closing; drop
+                        if not self._threads[i].is_alive():
+                            raise HostEnvError(i, "send", RuntimeError(
+                                "worker thread is dead and its inbox is "
+                                "full; command undeliverable")) from None
+
+    def stats(self) -> dict:
+        """Parent-side pool counters (both backends; the proc backend adds
+        the per-worker shared-memory stat rows on top)."""
+        return {"backend": "thread", "workers": self.M,
+                "steps": int(self._stat_steps),
+                "episodes": int(self._stat_episodes),
+                "recv_batches": int(self._stat_recvs)}
 
     def close(self, timeout: float = 5.0):
         """Stop workers and join them. Drains each inbox before posting the
@@ -351,6 +370,9 @@ class ProcHostPool(HostPool):
         self._closed = False
         self._ep_return = np.zeros((self.M,), np.float64)
         self._ep_length = np.zeros((self.M,), np.int64)
+        self._stat_steps = 0
+        self._stat_episodes = 0
+        self._stat_recvs = 0
         payloads = [_shm.dumps_env_fn(fn) for fn in env_fns]  # fail fast
         self._layout = _shm.SlabLayout(slab, self.M)
         from multiprocessing import get_context, shared_memory
@@ -364,12 +386,17 @@ class ProcHostPool(HostPool):
         self._v["ctrl"][:] = _shm.CMD_RESET
         self._out = set(range(self.M))          # env ids with commands queued
         self._fifo: List[tuple] = []            # harvested, undelivered items
+        # per-worker telemetry rows: workers write lock-free into their own
+        # row of a second (tiny) segment; the parent aggregates with one
+        # vectorized sum and zero pickling (telemetry.procstats)
+        self._stats_slab = StatSlab.create(self.M, HOST_FIELDS)
         ctx = get_context("spawn")              # never fork: jax-in-parent
         self._procs = []
         for i in range(self.M):
             cfg = _shm.WorkerConfig(
                 shm_name=self._seg.name, index=i, M=self.M, seed=seed,
-                spec=slab, spin=self.spin, payload=payloads[i])
+                spec=slab, spin=self.spin, payload=payloads[i],
+                stats=self._stats_slab.spec)
             p = ctx.Process(target=_shm.worker_main, args=(cfg,), daemon=True)
             p.start()
             self._procs.append(p)
@@ -439,19 +466,20 @@ class ProcHostPool(HostPool):
             timeout = self.recv_timeout
         deadline = None if timeout is None else time.monotonic() + timeout
         wait = _shm.SpinWait(self.spin)
-        while len(self._fifo) < self.N:
-            if self._harvest_ready():
-                wait.reset()
-                continue
-            self._check_liveness()
-            if deadline is not None and time.monotonic() > deadline:
-                raise TimeoutError(
-                    f"HostPool.recv timed out after {timeout}s with "
-                    f"{len(self._fifo)}/{self.N} envs ready (slow or "
-                    f"deadlocked worker?)")
-            wait.pause()
-        items = self._fifo[:self.N]
-        del self._fifo[:self.N]
+        with _span("host.recv"):
+            while len(self._fifo) < self.N:
+                if self._harvest_ready():
+                    wait.reset()
+                    continue
+                self._check_liveness()
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"HostPool.recv timed out after {timeout}s with "
+                        f"{len(self._fifo)}/{self.N} envs ready (slow or "
+                        f"deadlocked worker?)")
+                wait.pause()
+            items = self._fifo[:self.N]
+            del self._fifo[:self.N]
         return self._assemble(items)
 
     def send(self, actions, env_ids):
@@ -459,6 +487,10 @@ class ProcHostPool(HostPool):
         ``HostEnvError``) to command a dead or errored worker — the proc
         analogue of the bounded-put liveness check."""
         acts = np.asarray(actions)
+        with _span("host.send"):
+            self._send_rows(acts, env_ids)
+
+    def _send_rows(self, acts, env_ids):
         for a, i in zip(acts, env_ids):
             i = int(i)
             st = int(self._v["ctrl"][i])        # no view locals: see harvest
@@ -479,6 +511,17 @@ class ProcHostPool(HostPool):
             self._out.add(i)
             self._v["ctrl"][i] = _shm.CMD_STEP
 
+    def stats(self) -> dict:
+        """Parent counters + the per-worker shared-memory stat rows
+        (steps / resets / errors / wait_ns / busy_ns), aggregated with zero
+        pickling. Readable even after workers die — the rows live in the
+        parent-owned segment."""
+        out = super().stats()
+        out["backend"] = "proc"
+        if self._stats_slab is not None:
+            out["workers_detail"] = self._stats_slab.aggregate()
+        return out
+
     def close(self, timeout: float = 5.0):
         """Raise the stop byte, join workers, terminate stragglers, unlink
         the segment. Unlike threads, a worker stuck in a long env.step is
@@ -494,6 +537,9 @@ class ProcHostPool(HostPool):
             if p.is_alive():
                 p.terminate()
                 p.join(timeout=1.0)
+        if self._stats_slab is not None:
+            self._stats_slab.close()
+            self._stats_slab = None
         self._v = None                          # drop views before close()
         try:
             self._seg.close()

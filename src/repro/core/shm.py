@@ -233,6 +233,7 @@ class WorkerConfig:
     spec: SlabSpec
     spin: SpinConfig = field(default_factory=SpinConfig)
     payload: bytes = b""                 # pickled env factory
+    stats: object = None                 # telemetry.procstats.StatSpec | None
 
 
 def _write_error(views: dict, i: int, op: str, exc: BaseException) -> None:
@@ -292,8 +293,17 @@ def worker_main(cfg: WorkerConfig) -> None:
     env = None
     episode = 0
     spin = SpinWait(cfg.spin)
+    slab = srow = None
+    if cfg.stats is not None:
+        # lock-free per-worker stat row (telemetry slab; parent aggregates).
+        # Imported lazily: procstats depends on this module, and the import
+        # stays jax-free either way.
+        from repro.telemetry.procstats import StatSlab
+        slab = StatSlab.attach(cfg.stats)
+        srow = slab.row(i)
     try:
         while True:
+            t_wait = time.monotonic_ns()
             while True:                          # wait for a command
                 if v["stop"][0]:
                     return
@@ -302,6 +312,9 @@ def worker_main(cfg: WorkerConfig) -> None:
                     break
                 spin.pause()
             spin.reset()
+            t_busy = time.monotonic_ns()
+            if srow is not None:
+                srow.add("wait_ns", t_busy - t_wait)
             op = "reset"
             try:
                 if env is None:
@@ -329,9 +342,14 @@ def worker_main(cfg: WorkerConfig) -> None:
                 v["meta"][i, 0] = np.uint8(is_step)
                 v["meta"][i, 1] = np.uint8(has_score)
                 v["ctrl"][i] = READY
+                if srow is not None:
+                    srow.add("steps" if is_step else "resets")
+                    srow.add("busy_ns", time.monotonic_ns() - t_busy)
             except Exception as e:   # noqa: BLE001 — forwarded to the parent
                 _write_error(v, i, op, e)
                 v["ctrl"][i] = ERROR
+                if srow is not None:
+                    srow.add("errors")
                 return
     finally:
         close = getattr(env, "close", None)
@@ -340,5 +358,7 @@ def worker_main(cfg: WorkerConfig) -> None:
                 close()
             except Exception:
                 pass
-        del v                                    # release buffer views
+        del v, srow                              # release buffer views
         seg.close()
+        if slab is not None:
+            slab.close()

@@ -48,6 +48,9 @@ from typing import NamedTuple, Optional, Tuple
 import numpy as np
 
 from repro.core import shm
+from repro.telemetry import span as _span
+from repro.telemetry.procstats import (ACTOR_FIELDS, STALENESS_EDGES,
+                                       StatSlab)
 
 # fragment-slot states (one writer per state transition, like shm ctrl bytes)
 SLOT_EMPTY = 0     # learner-owned: actor may claim
@@ -174,9 +177,11 @@ def make_param_specs(leaves) -> Tuple[Tuple, int]:
     return tuple(specs), off
 
 
-def read_params_seqlock(v: dict, pviews: list, spin: shm.SpinConfig):
+def read_params_seqlock(v: dict, pviews: list, spin: shm.SpinConfig,
+                        srow=None):
     """Torn-read-safe copy of the published leaves: retry while the seqlock
-    counter is odd (write in progress) or changed across the copy."""
+    counter is odd (write in progress) or changed across the copy.
+    ``srow`` (a telemetry ``StatRow``) counts the retries when given."""
     w = shm.SpinWait(spin)
     while True:
         s1 = int(v["pseq"][0])
@@ -185,6 +190,8 @@ def read_params_seqlock(v: dict, pviews: list, spin: shm.SpinConfig):
             ver = int(v["pver"][0])
             if int(v["pseq"][0]) == s1:
                 return leaves, ver
+        if srow is not None:
+            srow.add("seqlock_retries")
         w.pause()
 
 
@@ -200,6 +207,7 @@ class ActorConfig:
     payload_policy: bytes = b""
     payload_dist: bytes = b""
     jitter_ms: float = 0.0   # injected per-step latency (bench/fault tests)
+    stats: object = None     # telemetry.procstats.StatSpec | None
 
 
 class Fragment(NamedTuple):
@@ -243,6 +251,12 @@ def actor_main(cfg: ActorConfig) -> None:
     lay = AsyncLayout(spec)
     v = lay.views(seg.buf)
     pviews = lay.param_views(seg.buf)
+    slab = srow = None
+    if cfg.stats is not None:
+        # lock-free per-actor stat row: steps / fragments / ring stalls /
+        # seqlock retries / staleness histogram, aggregated by the learner
+        slab = StatSlab.attach(cfg.stats)
+        srow = slab.row(me)
     try:
         env = pickle.loads(cfg.payload_env)
         policy = pickle.loads(cfg.payload_policy)
@@ -257,7 +271,7 @@ def actor_main(cfg: ActorConfig) -> None:
 
         base = jax.random.PRNGKey(cfg.seed)
         tmpl = jax.tree.structure(policy.abstract())
-        leaves, pver = read_params_seqlock(v, pviews, cfg.spin)
+        leaves, pver = read_params_seqlock(v, pviews, cfg.spin, srow)
         params = jax.tree.unflatten(tmpl, [jnp.asarray(l) for l in leaves])
         rng = np.random.default_rng(cfg.seed * 7919 + me + 1)
         shard_state = {}      # shard -> [carry, epoch, seq]
@@ -266,13 +280,17 @@ def actor_main(cfg: ActorConfig) -> None:
         while not v["stop"][0]:
             v["hbeat"][me] += 1
             produced = False
+            t_pass = time.monotonic_ns()
             for s in range(spec.num_shards):
                 if v["stop"][0] or int(v["assign"][s]) != me:
                     continue
                 if int(v["pver"][0]) != pver:
-                    leaves, pver = read_params_seqlock(v, pviews, cfg.spin)
+                    leaves, pver = read_params_seqlock(v, pviews, cfg.spin,
+                                                       srow)
                     params = jax.tree.unflatten(
                         tmpl, [jnp.asarray(l) for l in leaves])
+                    if srow is not None:
+                        srow.add("param_loads")
                 ep = int(v["epoch"][s])
                 st = shard_state.get(s)
                 if st is None or st[1] != ep:
@@ -291,7 +309,9 @@ def actor_main(cfg: ActorConfig) -> None:
                         slot = q
                         break
                 if slot is None:          # ring full: learner is behind —
-                    continue              # backpressure bounds staleness
+                    if srow is not None:  # backpressure bounds staleness
+                        srow.add("ring_full")
+                    continue
                 v["fctrl"][s, slot] = SLOT_WRITING
                 kroll = jax.random.fold_in(jax.random.fold_in(
                     jax.random.fold_in(jax.random.fold_in(base, 2), s),
@@ -323,6 +343,14 @@ def actor_main(cfg: ActorConfig) -> None:
                 st[0], st[2] = carry, st[2] + 1
                 v["fctrl"][s, slot] = SLOT_FULL     # commit (written last)
                 produced = True
+                if srow is not None:
+                    srow.add("fragments")
+                    srow.add("steps", T * R)
+                    # learner-updates-behind at commit time
+                    srow.observe(int(v["pver"][0]) - pver)
+            if srow is not None:
+                srow.add("busy_ns" if produced else "wait_ns",
+                         time.monotonic_ns() - t_pass)
             if produced:
                 spin.reset()
             else:
@@ -331,9 +359,13 @@ def actor_main(cfg: ActorConfig) -> None:
     except Exception as e:    # noqa: BLE001 — forwarded to the learner
         shm._write_error(v, me, "step", e)
         v["astat"][me] = A_ERR
+        if srow is not None:
+            srow.add("errors")
     finally:
-        del v, pviews
+        del v, pviews, srow
         seg.close()
+        if slab is not None:
+            slab.close()
 
 
 # =============================== learner side ================================
@@ -395,6 +427,10 @@ class AsyncRollouts:
         env_p = shm.dumps_env_fn(env)
         pol_p = shm.dumps_env_fn(policy)
         dist_p = shm.dumps_env_fn(dist)
+        # per-actor telemetry rows (separate tiny segment, learner-owned):
+        # written lock-free by actors, aggregated in stats() — and readable
+        # for dead actors, whose rows freeze at their last write
+        self._stats_slab = StatSlab.create(N, ACTOR_FIELDS, STALENESS_EDGES)
         ctx = get_context("spawn")
         self._procs = []
         try:
@@ -405,7 +441,7 @@ class AsyncRollouts:
                         shm_name=self._seg.name, actor_id=a, spec=self.spec,
                         seed=seed, spin=self.spin, payload_env=env_p,
                         payload_policy=pol_p, payload_dist=dist_p,
-                        jitter_ms=jitter),),
+                        jitter_ms=jitter, stats=self._stats_slab.spec),),
                     daemon=True, name=f"repro-actor-{a}")
                 p.start()
                 self._procs.append(p)
@@ -421,13 +457,14 @@ class AsyncRollouts:
         the previous version."""
         import jax
         host = [np.asarray(l) for l in jax.tree.leaves(params)]
-        v = self._v
-        v["pseq"][0] += 1              # odd: readers retry
-        for dst, src in zip(self._pviews, host):
-            np.copyto(dst, src.astype(dst.dtype, copy=False))
-        v["pver"][0] = version
-        v["pseq"][0] += 1              # even: committed
-        self.version = version
+        with _span("async.publish"):
+            v = self._v
+            v["pseq"][0] += 1          # odd: readers retry
+            for dst, src in zip(self._pviews, host):
+                np.copyto(dst, src.astype(dst.dtype, copy=False))
+            v["pver"][0] = version
+            v["pseq"][0] += 1          # even: committed
+            self.version = version
 
     # -- fragment harvest ------------------------------------------------------
     def poll(self) -> int:
@@ -483,22 +520,23 @@ class AsyncRollouts:
         # bounds waitpid traffic inside the hot spin loop.
         self._check_actors()
         self._last_liveness = time.monotonic()
-        while True:
-            if self.poll():
-                w.reset()
-            now = time.monotonic()
-            if now - self._last_liveness > 0.05:
-                self._last_liveness = now
-                self._check_actors()
-            if len(self._fifo) >= n:
-                return [self._fifo.popleft() for _ in range(n)]
-            if now > deadline:
-                raise TimeoutError(
-                    f"async tier: {n} fragment(s) not produced within "
-                    f"{timeout}s (have {len(self._fifo)}; alive="
-                    f"{self.alive_actors()}, assign="
-                    f"{self._v['assign'].tolist()})")
-            w.pause()
+        with _span("async.wait_fragments"):
+            while True:
+                if self.poll():
+                    w.reset()
+                now = time.monotonic()
+                if now - self._last_liveness > 0.05:
+                    self._last_liveness = now
+                    self._check_actors()
+                if len(self._fifo) >= n:
+                    return [self._fifo.popleft() for _ in range(n)]
+                if now > deadline:
+                    raise TimeoutError(
+                        f"async tier: {n} fragment(s) not produced within "
+                        f"{timeout}s (have {len(self._fifo)}; alive="
+                        f"{self.alive_actors()}, assign="
+                        f"{self._v['assign'].tolist()})")
+                w.pause()
 
     # -- fault handling --------------------------------------------------------
     def _check_errors(self) -> None:
@@ -557,7 +595,7 @@ class AsyncRollouts:
                 if a not in self._dead and p.is_alive()]
 
     def stats(self) -> dict:
-        return {
+        out = {
             "assign": self._v["assign"].tolist(),
             "epoch": self._v["epoch"].tolist(),
             "heartbeats": self._v["hbeat"].tolist(),
@@ -565,6 +603,12 @@ class AsyncRollouts:
             "straggler_flags": list(self.straggler_flags),
             "reshards": len(self.events),
         }
+        if self._stats_slab is not None:
+            # per-actor shared-memory rows: steps/fragments/ring stalls/
+            # seqlock retries + the staleness histogram, zero pickling.
+            # Dead actors' rows stay readable (learner-owned segment).
+            out["actors"] = self._stats_slab.aggregate()
+        return out
 
     # -- lifecycle -------------------------------------------------------------
     def close(self) -> None:
@@ -578,6 +622,9 @@ class AsyncRollouts:
             if p.is_alive():
                 p.terminate()
             p.join(timeout=5.0)
+        if getattr(self, "_stats_slab", None) is not None:
+            self._stats_slab.close()
+            self._stats_slab = None
         del self._v, self._pviews
         try:
             self._seg.close()

@@ -72,6 +72,16 @@ def main():
                     help="DxM (e.g. 16x16); device count must match")
     ap.add_argument("--devices", type=int, default=0,
                     help="force host platform device count (dry runs)")
+    ap.add_argument("--run-dir", default=None,
+                    help="telemetry for --ocean runs: spans + metrics "
+                         "stream into this directory; inspect with "
+                         "`python -m repro.telemetry summarize <dir>`")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the first --profile-launches engine "
+                         "launches in a jax.profiler trace written to DIR "
+                         "(view in Perfetto/TensorBoard)")
+    ap.add_argument("--profile-launches", type=int, default=3,
+                    help="launches to capture under --profile (default 3)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -185,40 +195,67 @@ def main():
         return
 
     if args.ocean:
+        from repro import telemetry
         from repro.envs.ocean import OCEAN
         from repro.rl.trainer import Trainer
         from repro.configs.ocean import ocean_tcfg, preset
+        if args.run_dir:
+            telemetry.enable(args.run_dir)
+        on_launch = None
+        if args.profile:
+            prof = {"launches": 0, "active": False}
+
+            def on_launch(u, _prof=prof):
+                if _prof["launches"] == 0:
+                    jax.profiler.start_trace(args.profile)
+                    _prof["active"] = True
+                _prof["launches"] += 1
+                if _prof["active"] and \
+                        _prof["launches"] >= args.profile_launches:
+                    jax.profiler.stop_trace()
+                    _prof["active"] = False
         names = list(OCEAN) if args.ocean == "all" \
             else [n.strip() for n in args.ocean.split(",")]
-        for name in names:
-            p = preset(name)
-            backend = args.engine_backend or "jit"
-            tcfg = ocean_tcfg(name, checkpoint_dir=args.ckpt_dir,
-                              engine_backend=backend,
-                              updates_per_launch=args.updates_per_launch,
-                              checkpoint_every=args.save_every,
-                              **async_overrides)
-            tr = Trainer(OCEAN[name](), tcfg, hidden=p.hidden,
-                         recurrent=p.recurrent, conv=p.conv, seed=args.seed)
-            steps = args.total_env_steps or p.total_steps
-            extra = (f" actors={tcfg.num_actors} "
-                     f"staleness={tcfg.staleness_mode}<={tcfg.max_staleness}"
-                     if backend == "async" else "")
-            print(f"=== {name} (recurrent={p.recurrent}{extra}) ===")
-            try:
-                m = tr.train(steps, log_every=10,
-                             target_score=p.target_score,
-                             checkpoint_dir=os.path.join(args.ckpt_dir,
-                                                         name),
-                             resume=args.resume)
-            finally:
-                tr.engine.close()      # async tier: actor procs + slab
-            if not m:
-                print("  -> resumed past the step budget; nothing to do")
-                continue
-            status = "SOLVED" if m["score"] >= p.target_score else "unsolved"
-            print(f"  -> {status} score={m['score']:.3f} "
-                  f"steps={m['env_steps']} sps={m['sps']:.0f}")
+        try:
+            for name in names:
+                p = preset(name)
+                backend = args.engine_backend or "jit"
+                tcfg = ocean_tcfg(name, checkpoint_dir=args.ckpt_dir,
+                                  engine_backend=backend,
+                                  updates_per_launch=args.updates_per_launch,
+                                  checkpoint_every=args.save_every,
+                                  **async_overrides)
+                tr = Trainer(OCEAN[name](), tcfg, hidden=p.hidden,
+                             recurrent=p.recurrent, conv=p.conv,
+                             seed=args.seed, log_dir=args.run_dir)
+                steps = args.total_env_steps or p.total_steps
+                extra = (f" actors={tcfg.num_actors} staleness="
+                         f"{tcfg.staleness_mode}<={tcfg.max_staleness}"
+                         if backend == "async" else "")
+                print(f"=== {name} (recurrent={p.recurrent}{extra}) ===")
+                try:
+                    m = tr.train(steps, log_every=10,
+                                 target_score=p.target_score,
+                                 checkpoint_dir=os.path.join(args.ckpt_dir,
+                                                             name),
+                                 resume=args.resume, on_launch=on_launch)
+                finally:
+                    tr.engine.close()  # async tier: actor procs + slab
+                    tr.logger.close()  # crash-safe final flush
+                if not m:
+                    print("  -> resumed past the step budget; nothing to do")
+                    continue
+                status = ("SOLVED" if m["score"] >= p.target_score
+                          else "unsolved")
+                print(f"  -> {status} score={m['score']:.3f} "
+                      f"steps={m['env_steps']} sps={m['sps']:.0f}")
+        finally:
+            if args.profile and prof["active"]:
+                jax.profiler.stop_trace()
+            if args.run_dir:
+                telemetry.flush()
+                print(f"telemetry: python -m repro.telemetry summarize "
+                      f"{args.run_dir}")
         return
 
     # ---- LM backbone PPO ------------------------------------------------------

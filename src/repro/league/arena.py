@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.emulation import Emulated
 from repro.core.vector import VecEnv
+from repro.telemetry import span as _span
 
 _EPS = 1e-6                           # score == 0.5 within eps ⇒ draw
 
@@ -119,8 +120,9 @@ class Arena:
     # -- public API ------------------------------------------------------------
     def play(self, params_a, params_b, key) -> dict:
         """One match; returns host floats."""
-        return {k: float(v) for k, v in
-                self._play(params_a, params_b, key).items()}
+        with _span("arena.play"):
+            return {k: float(v) for k, v in
+                    self._play(params_a, params_b, key).items()}
 
     def play_random(self, params_a, key) -> dict:
         """Side A vs the random-policy baseline (zero logits)."""
@@ -130,10 +132,11 @@ class Arena:
     def vs_pool(self, params_a, stacked_b, key) -> list:
         """Side A vs a K-stacked opponent pool in one vmapped launch;
         returns K per-opponent result dicts."""
-        K = jax.tree.leaves(stacked_b)[0].shape[0]
-        out = self._vs_pool(params_a, stacked_b, jax.random.split(key, K))
-        rows = jax.device_get(out)
-        return [{k: float(rows[k][i]) for k in rows} for i in range(K)]
+        with _span("arena.vs_pool"):
+            K = jax.tree.leaves(stacked_b)[0].shape[0]
+            out = self._vs_pool(params_a, stacked_b, jax.random.split(key, K))
+            rows = jax.device_get(out)
+            return [{k: float(rows[k][i]) for k in rows} for i in range(K)]
 
     def round_robin(self, stacked, versions, key) -> list:
         """All ordered pairs i < j of a K-stacked param set as ONE vmapped
@@ -146,10 +149,11 @@ class Arena:
         ii, jj = np.triu_indices(K, k=1)
         if len(ii) == 0:
             return []
-        side_a = jax.tree.map(lambda x: jnp.asarray(x)[ii], stacked)
-        side_b = jax.tree.map(lambda x: jnp.asarray(x)[jj], stacked)
-        out = self._pairs(side_a, side_b, jax.random.split(key, len(ii)))
-        outcomes = np.asarray(jax.device_get(out["outcome"]))
+        with _span("arena.round_robin"):
+            side_a = jax.tree.map(lambda x: jnp.asarray(x)[ii], stacked)
+            side_b = jax.tree.map(lambda x: jnp.asarray(x)[jj], stacked)
+            out = self._pairs(side_a, side_b, jax.random.split(key, len(ii)))
+            outcomes = np.asarray(jax.device_get(out["outcome"]))
         return [(versions[i], versions[j], float(o))
                 for i, j, o in zip(ii, jj, outcomes)]
 

@@ -64,7 +64,6 @@ a host decision at the launch boundary.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from typing import Callable, Optional
 
@@ -78,6 +77,11 @@ from repro.checkpoint import ckpt
 from repro.configs.base import TrainConfig
 from repro.core.vector import VecEnv
 from repro.distributed import sharding as shd
+from repro.telemetry import TierTimer
+from repro.telemetry import enabled as tel_enabled
+from repro.telemetry import flush as tel_flush
+from repro.telemetry import registry as tel_registry
+from repro.telemetry import span as tel_span
 from repro.rl.learner import (TrainState, init_train_state, make_ocean_learn,
                               make_ocean_update, make_vtrace_adv)
 from repro.rl.rollout import RolloutCarry, Trajectory
@@ -434,63 +438,88 @@ class TrainEngine:
     # -- the unified run loop --------------------------------------------------
     def run(self, total_steps: int, *, target_score: Optional[float] = None,
             on_update: Optional[Callable] = None,
-            on_launch: Optional[Callable] = None):
+            on_launch: Optional[Callable] = None, logger=None):
         """Train until env interactions ≥ total_steps (or solved).
 
-        Returns ``(history, solved)``: per-update metric dicts (with
-        ``env_steps``/``sps``) and the metrics of the solving update (or
-        None). ``on_update(u, metrics)`` fires per update once its launch's
-        ring is fetched; ``on_launch(updates_dispatched)`` fires right after
-        each dispatch (host-side, no device sync) — checkpoint hooks go
-        there. With ``target_score`` set, every launch is drained eagerly so
-        the check happens at each launch boundary; otherwise the engine
-        keeps one launch in flight and fetches the ring one launch late, so
-        JAX async dispatch overlaps host work with device compute.
+        Returns ``(history, solved)``: per-update metric dicts (with the
+        unified ``env_steps``/``sps``/``launch_ms``/``fetch_ms`` telemetry
+        keys — same semantics on every tier, stamped by one shared
+        ``TierTimer``). ``on_update(u, metrics)`` fires per update once its
+        launch's ring is fetched; ``on_launch(updates_dispatched)`` fires
+        right after each dispatch (host-side, no device sync) — checkpoint
+        hooks go there. With ``target_score`` set, every launch is drained
+        eagerly so the check happens at each launch boundary; otherwise the
+        engine keeps one launch in flight and fetches the ring one launch
+        late, so JAX async dispatch overlaps host work with device compute.
+
+        ``logger`` (a ``utils.metrics.MetricsLogger``) streams every drained
+        record as it lands and is flushed on *any* exit — an interrupted run
+        keeps every fetched record on disk, nothing truncates. With span
+        tracing enabled (``telemetry.enable``) a final telemetry-registry
+        snapshot is appended on clean completion; disabled runs leave the
+        metrics stream exactly one record per update.
         """
-        if self.backend == "pool":
-            return self._run_pool(total_steps, target_score=target_score,
-                                  on_update=on_update, on_launch=on_launch)
-        if self.backend == "host":
-            return self._run_host(total_steps, target_score=target_score,
-                                  on_update=on_update, on_launch=on_launch)
-        if self.backend == "async":
-            return self._run_async(total_steps, target_score=target_score,
-                                   on_update=on_update, on_launch=on_launch)
+        runner = {"pool": self._run_pool, "host": self._run_host,
+                  "async": self._run_async}.get(self.backend,
+                                                self._run_fused)
+        try:
+            with tel_span("engine.run"):
+                history, solved = runner(
+                    total_steps, target_score=target_score,
+                    on_update=on_update, on_launch=on_launch, logger=logger)
+            if logger is not None and history and tel_enabled():
+                tel_registry().emit(logger,
+                                    int(history[-1]["env_steps"]))
+            return history, solved
+        finally:
+            if logger is not None:
+                logger.flush()
+            tel_flush()
+
+    def _run_fused(self, total_steps, *, target_score=None, on_update=None,
+                   on_launch=None, logger=None):
+        """The jit / shard_map tiers: K fused updates per dispatch."""
         spu = self.steps_per_update
         num_updates = max(1, total_steps // spu)
         history, pending, solved = [], deque(), None
-        t0 = time.perf_counter()
-        done_before = self._resume_update * spu    # resumed runs: sps counts
-                                                   # only this process's work
+        # resumed runs: sps counts only this process's work
+        timer = TierTimer(spu, self._resume_update * spu)
+        upd_ctr = tel_registry().counter("engine.updates",
+                                         tier=self.backend)
 
         def drain_one():
             nonlocal solved
             u0, kk, ring = pending.popleft()
-            rows = np.asarray(jax.device_get(ring))
-            elapsed = time.perf_counter() - t0
+            with timer.fetch():
+                rows = np.asarray(jax.device_get(ring))
             for i in range(kk):
                 md = unpack_metrics(rows[i])
-                md["env_steps"] = (u0 + i + 1) * spu
-                md["sps"] = (md["env_steps"] - done_before) / elapsed
+                timer.stamp(md, (u0 + i + 1) * spu)
                 history.append(md)
+                upd_ctr.inc()
+                if logger is not None:
+                    logger.log(md["env_steps"], md, flush=False)
                 if on_update is not None:
                     on_update(u0 + i, md)
                 if (target_score is not None and solved is None
                         and md["episodes"] > 0
                         and md["score"] >= target_score):
                     solved = md
+            if logger is not None:
+                logger.flush()
 
         u = self._resume_update
         while u < num_updates:
             k = min(self.K, num_updates - u)
             self.key, sub = jax.random.split(self.key)
-            if self.selfplay is not None:
-                opp = self.selfplay.next_opponent()
-                self.ts, self.rc, ring = self._launch_for(k)(
-                    self.ts, self.rc, opp, sub)
-            else:
-                self.ts, self.rc, ring = self._launch_for(k)(self.ts,
-                                                             self.rc, sub)
+            with timer.launch():
+                if self.selfplay is not None:
+                    opp = self.selfplay.next_opponent()
+                    self.ts, self.rc, ring = self._launch_for(k)(
+                        self.ts, self.rc, opp, sub)
+                else:
+                    self.ts, self.rc, ring = self._launch_for(k)(
+                        self.ts, self.rc, sub)
             pending.append((u, k, ring))
             u += k
             self._maybe_checkpoint(u)
@@ -527,22 +556,26 @@ class TrainEngine:
             return value
         return boot
 
-    def _metrics_drainer(self, pending, history, spu, t0, on_update,
-                         target_score, st):
+    def _metrics_drainer(self, pending, history, timer, on_update,
+                         target_score, st, logger=None):
         """Shared pool/host-tier drain: fetch one update's metrics (blocks
         only on that update's learn, not on later dispatched work), stamp
-        env_steps/sps, fire ``on_update``, and latch the solving update into
-        ``st["solved"]``."""
-        done_before = self._resume_update * spu
+        the unified telemetry keys, fire ``on_update``, and latch the
+        solving update into ``st["solved"]``."""
+        upd_ctr = tel_registry().counter("engine.updates",
+                                         tier=self.backend)
+
         def drain_one():
             uu, m = pending.popleft()
-            md = {k: float(v) for k, v in
-                  zip(METRIC_KEYS, jax.device_get([m[k] for k in
-                                                   METRIC_KEYS]))}
-            md["env_steps"] = (uu + 1) * spu
-            md["sps"] = ((md["env_steps"] - done_before)
-                         / (time.perf_counter() - t0))
+            with timer.fetch():
+                md = {k: float(v) for k, v in
+                      zip(METRIC_KEYS, jax.device_get([m[k] for k in
+                                                       METRIC_KEYS]))}
+            timer.stamp(md, (uu + 1) * timer.spu)
             history.append(md)
+            upd_ctr.inc()
+            if logger is not None:
+                logger.log(md["env_steps"], md)
             if on_update is not None:
                 on_update(uu, md)
             if (target_score is not None and st["solved"] is None
@@ -551,7 +584,7 @@ class TrainEngine:
         return drain_one
 
     def _run_pool(self, total_steps, *, target_score=None, on_update=None,
-                  on_launch=None):
+                  on_launch=None, logger=None):
         """Host loop over the double-buffered pool. The trajectory for each
         buffer accumulates as in-flight device arrays; when a buffer reaches
         T steps its update runs while the other buffers' env steps stay
@@ -566,13 +599,15 @@ class TrainEngine:
         carry0 = [self.policy.initial_carry(B) for _ in range(nb)]
         recs = [[] for _ in range(nb)]
         history, pending, st = [], deque(), {"solved": None}
-        t0 = time.perf_counter()
-        drain_one = self._metrics_drainer(pending, history, spu, t0,
-                                          on_update, target_score, st)
+        timer = TierTimer(spu, self._resume_update * spu)
+        drain_one = self._metrics_drainer(pending, history, timer,
+                                          on_update, target_score, st,
+                                          logger)
 
         u = self._resume_update
         while u < num_updates and st["solved"] is None:
-            obs, rew, done, info, b = pool.recv()
+            with tel_span("pool.recv"):
+                obs, rew, done, info, b = pool.recv()
             if recs[b]:
                 recs[b][-1] = recs[b][-1] + (rew, done, info)
             if len(recs[b]) == T and len(recs[b][-1]) == 8:
@@ -586,8 +621,9 @@ class TrainEngine:
                     resets=stk(cols[4]),
                     infos=jax.tree.map(lambda *x: jnp.stack(x), *cols[7]))
                 self.key, kp = jax.random.split(self.key)
-                self.ts, m = self._learn(self.ts, carry0[b], traj,
-                                         last_value, kp)
+                with timer.launch():
+                    self.ts, m = self._learn(self.ts, carry0[b], traj,
+                                             last_value, kp)
                 carry0[b] = carry[b]
                 recs[b] = []
                 pending.append((u, m))
@@ -637,7 +673,7 @@ class TrainEngine:
         return out
 
     def _run_async(self, total_steps, *, target_score=None, on_update=None,
-                   on_launch=None):
+                   on_launch=None, logger=None):
         """The learner half of the actor–learner split, run through the
         (recovery-correct) ResilientLoop: collect one update's worth of
         fragments from the slab, learn, publish the new params version.
@@ -656,16 +692,21 @@ class TrainEngine:
         nf = ro.spec.num_shards           # fragments per update = one pass
                                           # over every env shard's batch rows
         history, st = [], {"solved": None}
-        t0 = time.perf_counter()
-        done_before = self._resume_update * spu
+        timer = TierTimer(spu, self._resume_update * spu)
+        reg = tel_registry()
+        upd_ctr = reg.counter("engine.updates", tier="async")
+        age_hist = reg.histogram("async.frag_age",
+                                 edges=(0.0, 1.0, 2.0, 4.0, 8.0))
 
         self._version = self._resume_update
         ro.publish(self.ts.params, self._version)
 
         def step_fn(state, frags):
-            traj, last_value = stack_fragments(frags)
+            with tel_span("engine.stack_fragments"):
+                traj, last_value = stack_fragments(frags)
             key, kp = jax.random.split(state["key"])
-            ts, m = self._learn(state["ts"], None, traj, last_value, kp)
+            with timer.launch():
+                ts, m = self._learn(state["ts"], None, traj, last_value, kp)
             u = int(state["update"]) + 1
             # publish inside the step: np.asarray on a poisoned update
             # raises *before* the slab is touched (see AsyncRollouts
@@ -685,16 +726,18 @@ class TrainEngine:
 
         def frag_stream():
             while loop.steps_done < num_updates and st["solved"] is None:
-                batch = self._collect_fragments(nf)
+                with tel_span("engine.collect"):
+                    batch = self._collect_fragments(nf)
                 self._last_ages = [self._version - f.version for f in batch]
+                for a in self._last_ages:
+                    age_hist.observe(a)
                 yield batch
 
         def on_metrics(u, m):
             self._version = ro.version    # published by step_fn
-            md = {k: float(np.asarray(v)) for k, v in m.items()}
-            md["env_steps"] = u * spu
-            md["sps"] = ((md["env_steps"] - done_before)
-                         / (time.perf_counter() - t0))
+            with timer.fetch():
+                md = {k: float(np.asarray(v)) for k, v in m.items()}
+            timer.stamp(md, u * spu)
             ages = getattr(self, "_last_ages", [])
             md["frag_age_mean"] = (float(np.mean(ages)) if ages else 0.0)
             md["frag_age_max"] = (float(np.max(ages)) if ages else 0.0)
@@ -703,6 +746,9 @@ class TrainEngine:
             md["actors_alive"] = len(ro.alive_actors())
             md["reshards"] = len(ro.events)
             history.append(md)
+            upd_ctr.inc()
+            if logger is not None:
+                logger.log(md["env_steps"], md)
             if on_update is not None:
                 on_update(u - 1, md)
             if on_launch is not None:
@@ -730,7 +776,7 @@ class TrainEngine:
             self.rollouts.close()
 
     def _run_host(self, total_steps, *, target_score=None, on_update=None,
-                  on_launch=None):
+                  on_launch=None, logger=None):
         """First-finisher loop over the bridged ``HostVecEnv``: each recv is
         the N (of M = pool_buffers·N) envs that finished stepping first;
         while the device computes their actions, the other M−N envs keep
@@ -752,9 +798,10 @@ class TrainEngine:
         recs = [[] for _ in range(M)]
         ready = deque()
         history, pending, st = [], deque(), {"solved": None}
-        t0 = time.perf_counter()
-        drain_one = self._metrics_drainer(pending, history, spu, t0,
-                                          on_update, target_score, st)
+        timer = TierTimer(spu, self._resume_update * spu)
+        drain_one = self._metrics_drainer(pending, history, timer,
+                                          on_update, target_score, st,
+                                          logger)
 
         u = self._resume_update
         while u < num_updates and st["solved"] is None:
@@ -799,7 +846,9 @@ class TrainEngine:
                 traj, c0, last_value = self._stack_fragments(frags, T, A,
                                                              recurrent)
                 self.key, kp = jax.random.split(self.key)
-                self.ts, m = self._learn(self.ts, c0, traj, last_value, kp)
+                with timer.launch():
+                    self.ts, m = self._learn(self.ts, c0, traj, last_value,
+                                             kp)
                 pending.append((u, m))
                 u += 1
                 self._maybe_checkpoint(u)

@@ -94,28 +94,25 @@ class Trainer:
 
     def train(self, total_steps: int, log_every: int = 0,
               target_score: Optional[float] = None,
-              checkpoint_dir: Optional[str] = None, resume: bool = False):
+              checkpoint_dir: Optional[str] = None, resume: bool = False,
+              on_launch=None):
         """Run until total env interactions ≥ total_steps (or solved).
         ``target_score`` is checked at launch boundaries (identical to
         per-update for K = 1). With ``checkpoint_dir`` the engine saves its
         full resumable state every ``tcfg.checkpoint_every`` updates
         (async, at the launch boundary); ``resume=True`` restores the
         newest committed checkpoint first and continues from its update
-        count."""
+        count. Metrics stream through the engine into ``self.logger``
+        (one flush per launch, crash-safe final flush in the engine)."""
         from repro.checkpoint import ckpt
         if checkpoint_dir:
             self.engine.checkpoint_dir = checkpoint_dir
             if resume and ckpt.latest(checkpoint_dir) is not None:
                 u0 = self.engine.restore(checkpoint_dir)
                 print(f"  resumed at update {u0}")
-        pending_log = []
 
         def on_update(u, m):
             self.history.append(m)
-            pending_log.append(m)
-            if len(pending_log) >= self.engine.K:   # one write per launch
-                self.logger.log_batch(pending_log)
-                pending_log.clear()
             if log_every and (u % log_every == 0):
                 print(f"  upd {u:4d} steps {m['env_steps']:7d} "
                       f"score {m['score']:.3f} "
@@ -124,9 +121,8 @@ class Trainer:
                       f"sps {m['sps']:.0f}")
 
         _, solved = self.engine.run(total_steps, target_score=target_score,
-                                    on_update=on_update)
-        if pending_log:
-            self.logger.log_batch(pending_log)
+                                    on_update=on_update,
+                                    on_launch=on_launch, logger=self.logger)
         if solved is not None:
             return solved
         # a fully-resumed run may have no new updates to report

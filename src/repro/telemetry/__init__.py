@@ -1,0 +1,35 @@
+"""repro.telemetry — unified observability: spans, metrics, proc stats.
+
+Quickstart::
+
+    from repro import telemetry
+
+    telemetry.enable(run_dir="runs/exp1")      # or enable() for in-memory
+    with telemetry.span("my.section"):
+        ...
+    telemetry.registry().counter("my.events").inc()
+    telemetry.flush()                          # -> runs/exp1/spans.jsonl
+
+    # later, from a shell:
+    #   python -m repro.telemetry summarize runs/exp1
+    #   python -m repro.telemetry export-trace runs/exp1 --out trace.json
+
+Everything here is jax-free (stdlib + numpy): spawn workers in
+``core/shm.py`` and ``distributed/actor_learner.py`` import this chain
+before jax exists in their interpreter, and the fork-guard depends on that.
+Imports are eager (no PEP 562 laziness) — the whole package is a few
+hundred lines of stdlib with no heavy deps.
+"""
+from repro.telemetry.registry import (Counter, Gauge, Histogram, Registry,
+                                      registry)
+from repro.telemetry.spans import (SpanRecord, Tracer, chrome_trace, disable,
+                                   enable, enabled, flush, get_tracer, span,
+                                   summarize_records)
+from repro.telemetry.timers import TierTimer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "registry",
+    "SpanRecord", "Tracer", "chrome_trace", "disable", "enable", "enabled",
+    "flush", "get_tracer", "span", "summarize_records",
+    "TierTimer",
+]

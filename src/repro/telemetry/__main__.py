@@ -1,0 +1,133 @@
+"""Run-inspection CLI.
+
+    python -m repro.telemetry summarize <run_dir>
+        Per-span p50/p99 latency table (from <run_dir>/spans.jsonl) plus an
+        SPS curve reconstructed from the run's metrics JSONL stream.
+
+    python -m repro.telemetry export-trace <run_dir> [--out trace.json]
+        Convert spans.jsonl to Chrome trace-event JSON for Perfetto /
+        chrome://tracing.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.telemetry.spans import (SPANS_FILE, chrome_trace, percentile,
+                                   summarize_records)
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def _read_jsonl(path: str) -> list:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def load_spans(run_dir: str) -> list:
+    path = os.path.join(run_dir, SPANS_FILE)
+    if not os.path.exists(path):
+        return []
+    return _read_jsonl(path)
+
+
+def load_metrics(run_dir: str) -> list:
+    """All metric records in the run dir (every *.jsonl except spans),
+    ordered by env_steps/step."""
+    recs = []
+    for path in sorted(glob.glob(os.path.join(run_dir, "*.jsonl"))):
+        if os.path.basename(path) == SPANS_FILE:
+            continue
+        recs.extend(_read_jsonl(path))
+    recs.sort(key=lambda r: r.get("env_steps", r.get("step", 0)))
+    return recs
+
+
+def sparkline(vals, width: int = 48) -> str:
+    if not vals:
+        return ""
+    if len(vals) > width:                       # downsample by striding
+        stride = len(vals) / width
+        vals = [vals[int(i * stride)] for i in range(width)]
+    lo, hi = min(vals), max(vals)
+    rng = (hi - lo) or 1.0
+    return "".join(_SPARK[int((v - lo) / rng * (len(_SPARK) - 1))]
+                   for v in vals)
+
+
+def summarize(run_dir: str, out=sys.stdout) -> dict:
+    """Print the summary; returns the data (the tests consume the dict)."""
+    spans = load_spans(run_dir)
+    summary = summarize_records(spans)
+    w = max([len(n) for n in summary] + [4])
+    print(f"# spans — {len(spans)} records, "
+          f"{len(summary)} names ({run_dir})", file=out)
+    hdr = (f"{'name':<{w}}  {'count':>7}  {'p50_ms':>9}  {'p99_ms':>9}  "
+           f"{'mean_ms':>9}  {'max_ms':>9}  {'total_ms':>10}")
+    print(hdr, file=out)
+    print("-" * len(hdr), file=out)
+    for name, s in summary.items():
+        print(f"{name:<{w}}  {s['count']:>7}  {s['p50_ms']:>9.3f}  "
+              f"{s['p99_ms']:>9.3f}  {s['mean_ms']:>9.3f}  "
+              f"{s['max_ms']:>9.3f}  {s['total_ms']:>10.1f}", file=out)
+
+    metrics = load_metrics(run_dir)
+    sps = [r["sps"] for r in metrics
+           if isinstance(r.get("sps"), (int, float))]
+    curve = {}
+    if sps:
+        srt = sorted(sps)
+        curve = {"n": len(sps), "min": srt[0], "max": srt[-1],
+                 "mean": sum(sps) / len(sps),
+                 "p50": percentile(srt, 0.5), "last": sps[-1]}
+        print(f"\n# sps curve — {curve['n']} updates  "
+              f"min {curve['min']:.0f}  p50 {curve['p50']:.0f}  "
+              f"max {curve['max']:.0f}  last {curve['last']:.0f}", file=out)
+        print(sparkline(sps), file=out)
+    elif metrics:
+        print(f"\n# {len(metrics)} metric records (no sps key)", file=out)
+    return {"spans": summary, "sps_curve": curve,
+            "n_span_records": len(spans)}
+
+
+def export_trace(run_dir: str, out_path: str) -> int:
+    spans = load_spans(run_dir)
+    trace = chrome_trace(spans)
+    with open(out_path, "w") as f:
+        json.dump(trace, f)
+    return len(trace["traceEvents"])
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.telemetry",
+                                description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+    ps = sub.add_parser("summarize", help="p50/p99 per span + SPS curve")
+    ps.add_argument("run_dir")
+    pe = sub.add_parser("export-trace", help="spans.jsonl -> Chrome JSON")
+    pe.add_argument("run_dir")
+    pe.add_argument("--out", default="")
+    args = p.parse_args(argv)
+
+    if not os.path.isdir(args.run_dir):
+        print(f"error: not a directory: {args.run_dir}", file=sys.stderr)
+        return 2
+    if args.cmd == "summarize":
+        data = summarize(args.run_dir)
+        return 0 if data["n_span_records"] else 1
+    out_path = args.out or os.path.join(args.run_dir, "trace.json")
+    n = export_trace(args.run_dir, out_path)
+    print(f"wrote {n} events -> {out_path}")
+    return 0 if n else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,255 @@
+"""Low-overhead span tracer: the timing substrate for every hot path.
+
+Design constraints, in order:
+
+1. **Disabled must be free.** ``span(name)`` with telemetry off returns a
+   module-level ``_NullSpan`` singleton — no allocation, no clock read, one
+   global load and one ``is None`` test. Hot loops (engine launch/fetch,
+   host recv, actor fragment commits) keep their span calls unconditionally;
+   the cost only exists when someone turned tracing on.
+2. **Enabled must be cheap.** One ``time.monotonic_ns()`` pair per span and
+   one ``deque.append`` (GIL-atomic, so thread-safe without a lock) into a
+   bounded ring. No string formatting, no dict building on the hot path.
+3. **Host-side only.** Spans wrap Python host code — launch dispatch, device
+   fetches, shared-memory waits. They must never appear inside jitted
+   functions (they would run once at trace time and lie forever); the
+   ``TELEMETRY-IN-JIT`` rule in ``repro.analysis`` enforces this statically.
+
+Nesting is tracked per-thread/task via a ``contextvars.ContextVar`` depth
+counter so the Chrome trace export reconstructs the flame graph. Export
+targets: ``spans.jsonl`` (one record per span, appended by ``flush()``) and
+the Chrome trace-event JSON that Perfetto / ``chrome://tracing`` loads.
+
+jax-free by design: spawn workers (``core/shm.py`` / ``actor_main``) import
+this module before jax exists in their interpreter.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import deque
+from contextvars import ContextVar
+from typing import List, NamedTuple, Optional
+
+__all__ = [
+    "Tracer", "SpanRecord", "span", "enable", "disable", "enabled",
+    "get_tracer", "flush", "percentile", "summarize_records",
+]
+
+SPANS_FILE = "spans.jsonl"
+
+# (depth, parent-name) of the innermost open span on this thread/task
+_STACK: ContextVar[tuple] = ContextVar("repro_span_stack", default=(0, ""))
+
+
+class SpanRecord(NamedTuple):
+    """One completed span. ``ts_ns`` is ``time.monotonic_ns()`` at entry —
+    comparable within a process, not across processes."""
+    name: str
+    ts_ns: int
+    dur_ns: int
+    pid: int
+    tid: int
+    depth: int
+    parent: str
+
+
+class _NullSpan:
+    """The disabled fast path: a stateless singleton context manager."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, et, ev, tb):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """One live span (enabled path). Records itself into the tracer ring on
+    exit; exceptions propagate (the span still records its duration)."""
+    __slots__ = ("_ring", "name", "_t0", "_tok", "_depth", "_parent")
+
+    def __init__(self, ring: deque, name: str):
+        self._ring = ring
+        self.name = name
+
+    def __enter__(self):
+        depth, _parent = _STACK.get((0, ""))   # ContextVar read, never blocks
+        self._depth = depth
+        self._parent = _parent
+        self._tok = _STACK.set((depth + 1, self.name))
+        self._t0 = time.monotonic_ns()
+        return self
+
+    def __exit__(self, et, ev, tb):
+        dur = time.monotonic_ns() - self._t0
+        _STACK.reset(self._tok)
+        self._ring.append(SpanRecord(
+            self.name, self._t0, dur, os.getpid(),
+            threading.get_ident() & 0xFFFFFFFF, self._depth, self._parent))
+        return False
+
+
+class Tracer:
+    """Bounded ring of completed spans. ``deque(maxlen=)`` appends are
+    GIL-atomic, so concurrent host threads record without a lock; the lock
+    below only serializes drains/flushes against each other."""
+
+    def __init__(self, run_dir: Optional[str] = None, capacity: int = 65536):
+        self.run_dir = run_dir
+        self.capacity = int(capacity)
+        self._ring: deque = deque(maxlen=self.capacity)
+        self._io_lock = threading.Lock()
+        if run_dir:
+            os.makedirs(run_dir, exist_ok=True)
+
+    # -- recording ---------------------------------------------------------
+    def span(self, name: str) -> _Span:
+        return _Span(self._ring, name)
+
+    def records(self) -> List[SpanRecord]:
+        """Snapshot of the ring without draining it."""
+        return list(self._ring)
+
+    def drain(self) -> List[SpanRecord]:
+        """Atomically take everything recorded so far."""
+        with self._io_lock:
+            out = []
+            ring = self._ring
+            while True:
+                try:
+                    out.append(ring.popleft())
+                except IndexError:
+                    return out
+
+    # -- export ------------------------------------------------------------
+    def flush(self) -> int:
+        """Append drained spans to ``<run_dir>/spans.jsonl``; returns the
+        number written. Without a run_dir the ring just keeps accumulating
+        (bounded) and flush is a no-op returning 0."""
+        if not self.run_dir:
+            return 0
+        recs = self.drain()
+        if not recs:
+            return 0
+        path = os.path.join(self.run_dir, SPANS_FILE)
+        with self._io_lock, open(path, "a") as f:
+            for r in recs:
+                f.write(json.dumps(r._asdict()) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        return len(recs)
+
+    def summary(self) -> dict:
+        return summarize_records(self.records())
+
+    def to_chrome_trace(self, records: Optional[List[SpanRecord]] = None) -> dict:
+        return chrome_trace(self.records() if records is None else records)
+
+
+# -- module-level switch ---------------------------------------------------
+_TRACER: Optional[Tracer] = None
+
+
+def span(name: str):
+    """THE hot-path entry point. Disabled: returns the shared no-op span
+    (zero allocations). Enabled: returns a recording span."""
+    t = _TRACER
+    if t is None:
+        return _NULL_SPAN
+    return _Span(t._ring, name)
+
+
+def enable(run_dir: Optional[str] = None, capacity: int = 65536) -> Tracer:
+    """Turn tracing on process-wide; returns the (new) tracer. Re-enabling
+    with the same args keeps the existing tracer so spans survive."""
+    global _TRACER
+    if (_TRACER is not None and _TRACER.run_dir == run_dir
+            and _TRACER.capacity == int(capacity)):
+        return _TRACER
+    _TRACER = Tracer(run_dir=run_dir, capacity=capacity)
+    return _TRACER
+
+
+def disable() -> None:
+    """Turn tracing off (flushing any pending spans first)."""
+    global _TRACER
+    if _TRACER is not None:
+        try:
+            _TRACER.flush()
+        finally:
+            _TRACER = None
+
+
+def enabled() -> bool:
+    return _TRACER is not None
+
+
+def get_tracer() -> Optional[Tracer]:
+    return _TRACER
+
+
+def flush() -> int:
+    """Flush the active tracer (no-op when disabled)."""
+    t = _TRACER
+    return t.flush() if t is not None else 0
+
+
+# -- pure helpers (shared with the CLI) ------------------------------------
+def percentile(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile over an already-sorted list."""
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, max(0, int(q * len(sorted_vals))))
+    return float(sorted_vals[i])
+
+
+def summarize_records(records) -> dict:
+    """Per-name stats: count / total_ms / mean_ms / p50_ms / p99_ms / max_ms.
+    Accepts SpanRecords or dicts (the spans.jsonl rows)."""
+    by_name: dict = {}
+    for r in records:
+        if isinstance(r, dict):
+            name, dur = r["name"], int(r["dur_ns"])
+        else:
+            name, dur = r.name, r.dur_ns
+        by_name.setdefault(name, []).append(dur)
+    out = {}
+    for name, durs in sorted(by_name.items()):
+        durs.sort()
+        total = sum(durs)
+        out[name] = {
+            "count": len(durs),
+            "total_ms": total / 1e6,
+            "mean_ms": total / len(durs) / 1e6,
+            "p50_ms": percentile(durs, 0.50) / 1e6,
+            "p99_ms": percentile(durs, 0.99) / 1e6,
+            "max_ms": durs[-1] / 1e6,
+        }
+    return out
+
+
+def chrome_trace(records) -> dict:
+    """Chrome trace-event JSON (``ph: "X"`` complete events, µs units) —
+    loads directly in Perfetto / chrome://tracing."""
+    events = []
+    for r in records:
+        if isinstance(r, dict):
+            r = SpanRecord(**r)
+        events.append({
+            "name": r.name,
+            "cat": "repro",
+            "ph": "X",
+            "ts": r.ts_ns / 1e3,
+            "dur": r.dur_ns / 1e3,
+            "pid": r.pid,
+            "tid": r.tid,
+            "args": {"depth": r.depth, "parent": r.parent},
+        })
+    return {"traceEvents": events, "displayTimeUnit": "ms"}

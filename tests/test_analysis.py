@@ -207,6 +207,65 @@ def test_impure_import_numpy_in_jitted():
     assert "IMPURE-IMPORT" in _rules(fs)
 
 
+def test_telemetry_in_jit_flags_span_under_trace():
+    fs = check_source(_src("""
+        import jax
+        from repro.telemetry import span
+
+        @jax.jit
+        def instrumented(x):
+            with span("learn"):
+                return x * 2
+    """))
+    assert "TELEMETRY-IN-JIT" in _rules(fs)
+
+
+def test_telemetry_in_jit_flags_aliased_and_scan_body():
+    fs = check_source(_src("""
+        import jax
+        import jax.numpy as jnp
+        from repro import telemetry
+        from repro.telemetry import span as _span
+
+        def launch():
+            def body(c, x):
+                telemetry.registry().counter("steps").inc()
+                with _span("step"):
+                    c = c + x
+                return c, x
+            return jax.lax.scan(body, 0.0, jnp.ones(3))
+    """))
+    assert sum(f.rule == "TELEMETRY-IN-JIT" for f in fs) >= 2
+
+
+def test_telemetry_in_host_loop_is_clean():
+    fs = check_source(_src("""
+        import jax
+        from repro.telemetry import span
+
+        def host_loop(launch, n):
+            out = []
+            for i in range(n):
+                with span("engine.launch"):
+                    out.append(launch(i))
+            return out
+    """))
+    assert "TELEMETRY-IN-JIT" not in _rules(fs)
+
+
+def test_telemetry_in_jit_noqa_suppresses():
+    fs = check_source(_src("""
+        import jax
+        from repro.telemetry import span
+
+        @jax.jit
+        def waived(x):
+            with span("trace-time-only"):  # repro: noqa[TELEMETRY-IN-JIT]
+                return x * 2
+    """))
+    assert "TELEMETRY-IN-JIT" not in _rules(fs)
+
+
 # ---------------------------------------------------------------------------
 # layer 1: suppression and static lookalikes
 
