@@ -171,6 +171,14 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
+    from repro.telemetry import benchwatch
+    benchwatch.record(
+        "actor",
+        {f"{tier}_sps": cells[tier]["sps"] for tier in cells},
+        acceptance={"acceptance_applicable": multicore,
+                    "async_ge_1p3x_host": ok if multicore else None},
+        meta={"updates": updates, "quick": bool(args.quick),
+              "jitter_ms": args.jitter_ms})
     if multicore and not ok:
         print("FAIL: async < 1.3x host under jitter on a multicore machine")
         return 1

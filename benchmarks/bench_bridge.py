@@ -156,6 +156,16 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
+    from repro.telemetry import benchwatch
+    bw_cells = {"vecenv_sync_sps": round(sync, 1),
+                "vecenv_async2_sps": round(async2, 1),
+                "vecenv_async4_sps": round(async4, 1)}
+    for jkey, cell in engine.items():
+        bw_cells[f"engine_{jkey}_sync_sps"] = cell["sync_sps"]
+        bw_cells[f"engine_{jkey}_async_sps"] = cell["async_sps"]
+    benchwatch.record("bridge", bw_cells,
+                      acceptance={"async2_ge_1p3x_sync": gain2 >= 1.3},
+                      meta={"quick": bool(args.quick), "steps": steps})
 
 
 if __name__ == "__main__":

@@ -85,10 +85,14 @@ def run():
 
 
 def main():
-    for r in run():
+    from repro.telemetry import benchwatch
+    rows = run()
+    for r in rows:
         print(f"bench_emulation/{r['env']},{r['emulated_us']:.1f},"
               f"raw_us={r['raw_us']:.1f};overhead_pct={r['overhead_pct']:.1f};"
               f"sps={r['sps_emulated']:.0f}")
+    benchwatch.record(
+        "emulation", {f"{r['env']}_sps": r["sps_emulated"] for r in rows})
 
 
 if __name__ == "__main__":

@@ -141,6 +141,12 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
+    from repro.telemetry import benchwatch
+    benchwatch.record(
+        "engine",
+        {f"{r['env']}_{r['backend']}_K{r['K']}_sps": r["sps"]
+         for r in results},
+        meta={"quick": bool(args.quick), "devices": ndev})
 
 
 if __name__ == "__main__":

@@ -153,6 +153,16 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
+    from repro.telemetry import benchwatch
+    benchwatch.record(
+        "hostpool",
+        {f"{cell}_{bk}_sps": cells[cell][bk]
+         for cell in cells for bk in ("thread", "proc")},
+        acceptance={
+            "acceptance_applicable": multicore,
+            "cpu_proc_ge_2x_thread": cpu_ok if multicore else None,
+            "sleep_proc_ge_0p85x_thread": sleep_ok if multicore else None},
+        meta={"quick": bool(args.quick), "M": M, "N": N})
     if multicore and not cpu_ok:
         print("FAIL: cpu cell proc < 2x thread on a multicore machine")
         return 1

@@ -49,6 +49,7 @@ def main(include_interpret: bool = False) -> None:
     """Interpret mode is 100-1000x slower than compiled paths — skipped by
     default so the table reflects deployable backends."""
     key = jax.random.PRNGKey(0)
+    cells = {}
     try:
         for op in dispatch.OPS:
             impls = dispatch.available(op)
@@ -57,6 +58,7 @@ def main(include_interpret: bool = False) -> None:
             args, kw = _args(op, key)
             results, best = dispatch.autotune(op, *args, impls=impls,
                                               iters=10, **kw)
+            cells[f"{op}_best_calls_per_s"] = results[best]
             for name, calls_per_s in sorted(results.items(),
                                             key=lambda kv: -kv[1]):
                 print(f"kernels/{op}/{name},{1e6 / calls_per_s:.1f},"
@@ -65,6 +67,9 @@ def main(include_interpret: bool = False) -> None:
         # winners were tuned on this table's fixed shapes — don't let them
         # leak into auto dispatch for the rest of the process
         dispatch.clear_autotune()
+    from repro.telemetry import benchwatch
+    benchwatch.record("kernels", cells,
+                      meta={"include_interpret": bool(include_interpret)})
 
 
 if __name__ == "__main__":

@@ -125,6 +125,13 @@ def main():
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}; K8 speedup {sp8}x "
           f"(acceptance >= 3x: {'OK' if sp8 >= 3.0 else 'FAILED'})")
+    from repro.telemetry import benchwatch
+    benchwatch.record(
+        "league",
+        {f"{k}_speedup": v["speedup"] for k, v in results.items()},
+        acceptance={"k8_speedup_ge_3x": sp8 >= 3.0,
+                    "elo_sanity": bool(elo["ok"])},
+        meta={"quick": bool(args.quick)})
     if not out["acceptance"]["ok"] or not elo["ok"]:
         sys.exit(1)
 

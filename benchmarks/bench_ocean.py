@@ -33,10 +33,17 @@ def run():
 
 
 def main():
-    for r in run():
+    from repro.telemetry import benchwatch
+    rows = run()
+    for r in rows:
         print(f"bench_ocean/{r['env']},{r['wall_s']*1e6:.0f},"
               f"score={r['score']:.3f};steps={r['env_steps']};"
               f"solved={int(r['solved'])}")
+    benchwatch.record(
+        "ocean",
+        {f"{r['env']}_sps": r["env_steps"] / max(r["wall_s"], 1e-9)
+         for r in rows},
+        acceptance={f"{r['env']}_solved": bool(r["solved"]) for r in rows})
 
 
 if __name__ == "__main__":

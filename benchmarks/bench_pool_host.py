@@ -67,12 +67,16 @@ def run(N: int = 8, steps: int = 200):
 
 
 def main():
+    from repro.telemetry import benchwatch
     r = run()
     print(f"bench_pool_host/envpool,{1e6 / r['pool2_sps']:.1f},"
           f"sync_sps={r['sync_sps']:.0f};pool2_sps={r['pool2_sps']:.0f};"
           f"pool4_sps={r['pool4_sps']:.0f};"
           f"pool2_gain_pct={r['pool2_gain_pct']:.1f};"
           f"pool4_gain_pct={r['pool4_gain_pct']:.1f}")
+    benchwatch.record(
+        "pool_host", {k: r[k] for k in ("sync_sps", "pool2_sps",
+                                        "pool4_sps")})
 
 
 if __name__ == "__main__":

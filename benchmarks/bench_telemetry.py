@@ -88,7 +88,7 @@ def main(argv=None):
     ap.add_argument("--out", default="BENCH_telemetry.json")
     ap.add_argument("--trace-out", default="",
                     help="sample Chrome trace from the enabled jit cell "
-                         "(default <out dir>/trace_sample.json)")
+                         "(default <out dir>/docs/trace_sample.json)")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args(argv)
 
@@ -101,7 +101,9 @@ def main(argv=None):
                 num_minibatches=2, learning_rate=1e-3, gamma=0.95,
                 checkpoint_every=0)
     trace_out = args.trace_out or os.path.join(
-        os.path.dirname(os.path.abspath(args.out)), "trace_sample.json")
+        os.path.dirname(os.path.abspath(args.out)), "docs",
+        "trace_sample.json")
+    os.makedirs(os.path.dirname(os.path.abspath(trace_out)), exist_ok=True)
     print(f"cores={cores}, updates={updates}, repeats={args.repeats}")
 
     cells = {}
@@ -163,6 +165,14 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
+    from repro.telemetry import benchwatch
+    benchwatch.record(
+        "telemetry",
+        {f"{tier}_{mode}_sps": cells[tier][f"sps_{mode}"]
+         for tier in cells for mode in ("disabled", "enabled")},
+        acceptance={"acceptance_applicable": multicore,
+                    "overhead_le_3pct": bool(ok) if multicore else None},
+        meta={"updates": updates, "quick": bool(args.quick)})
     if multicore and not ok:
         print(f"FAIL: telemetry overhead {100 * worst:.2f}% > 3% on a "
               f"multicore machine")

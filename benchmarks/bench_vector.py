@@ -88,11 +88,17 @@ def run(num_envs=64, steps=200):
 
 
 def main():
-    for r in run():
+    from repro.telemetry import benchwatch
+    rows = run()
+    cells = {}
+    for r in rows:
         print(f"bench_vector/{r['env']},{1e6 / r['vmap']:.2f},"
               f"serial_sps={r['serial']:.0f};vmap_sps={r['vmap']:.0f};"
               f"pool_sps={r['pool']:.0f};"
               f"pool_gain_pct={r['pool_vs_vmap_pct']:.1f}")
+        cells[f"{r['env']}_vmap_sps"] = r["vmap"]
+        cells[f"{r['env']}_pool_sps"] = r["pool"]
+    benchwatch.record("vector", cells)
 
 
 if __name__ == "__main__":

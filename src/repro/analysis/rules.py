@@ -615,6 +615,19 @@ def _blocking_no_timeout(ctx: ModuleContext) -> Iterator[Finding]:
             # object list, not a timeout (unlike Event.wait(t))
             ch = dotted_chain(node.func)
             blocking = len(ch) >= 2 and ch[-2] == "connection"
+        elif attr == "accept" and not node.args:
+            # socket.accept() / HTTPServer accept path — parks the thread
+            # until a client connects; unbounded unless settimeout was set,
+            # which this AST pass can't prove. Serve loops should poll
+            # under a server timeout (handle_request with a class-level
+            # timeout) or select() with a deadline.
+            blocking = True
+        elif attr == "serve_forever":
+            # serve_forever blocks until shutdown() from another thread —
+            # a wedged handler or a lost shutdown() call leaves it parked
+            # with no way to observe a stop flag. Run handle_request()
+            # in a loop under a server timeout instead.
+            blocking = True
         if blocking:
             yield ctx.finding(
                 "BLOCKING-NO-TIMEOUT", node,

@@ -209,6 +209,11 @@ class TrainConfig:
     checkpoint_dir: str = "/tmp/repro_ckpt"
     keep_checkpoints: int = 3
 
+    # observability (telemetry/http.py)
+    metrics_port: int = 0            # 0 = no monitoring server; >0 binds
+                                     # /metrics, /healthz, /spans on
+                                     # 127.0.0.1:<port> for the run
+
 
 @dataclass(frozen=True)
 class ShapeConfig:

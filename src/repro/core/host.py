@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import shm as _shm
 from repro.telemetry import span as _span
+from repro.telemetry import traceprop as _traceprop
 from repro.telemetry.procstats import HOST_FIELDS, StatSlab
 
 
@@ -149,6 +150,9 @@ class HostPool:
         self._stat_steps = 0
         self._stat_episodes = 0
         self._stat_recvs = 0
+        # wall-clock liveness beats, one per worker (written by the worker
+        # thread, read by liveness()/healthz — int64 stores are atomic)
+        self._beat_ns = np.zeros((self.M,), np.int64)
         for i, env in enumerate(self._envs):
             t = threading.Thread(target=self._worker, args=(i,), daemon=True)
             t.start()
@@ -171,6 +175,7 @@ class HostPool:
         op = "reset"
         try:
             while not self._stop:
+                self._beat_ns[i] = time.time_ns()
                 try:
                     # poll, don't park: an untimed get() here kept the
                     # worker alive forever when the close sentinel was
@@ -298,13 +303,24 @@ class HostPool:
                                 "worker thread is dead and its inbox is "
                                 "full; command undeliverable")) from None
 
+    def liveness(self) -> dict:
+        """Per-worker liveness for /healthz: wall-clock beats (ns) plus the
+        set of workers known dead. ``last_beat_ns == 0`` means "not booted
+        yet" — the consumer treats that as booting, not dead."""
+        dead = [] if self._stop else [
+            i for i, t in enumerate(self._threads) if not t.is_alive()]
+        return {"now_ns": time.time_ns(), "workers": self.M,
+                "last_beat_ns": [int(b) for b in self._beat_ns],
+                "dead": dead}
+
     def stats(self) -> dict:
         """Parent-side pool counters (both backends; the proc backend adds
         the per-worker shared-memory stat rows on top)."""
         return {"backend": "thread", "workers": self.M,
                 "steps": int(self._stat_steps),
                 "episodes": int(self._stat_episodes),
-                "recv_batches": int(self._stat_recvs)}
+                "recv_batches": int(self._stat_recvs),
+                "liveness": self.liveness()}
 
     def close(self, timeout: float = 5.0):
         """Stop workers and join them. Drains each inbox before posting the
@@ -392,14 +408,20 @@ class ProcHostPool(HostPool):
         self._stats_slab = StatSlab.create(self.M, HOST_FIELDS)
         ctx = get_context("spawn")              # never fork: jax-in-parent
         self._procs = []
-        for i in range(self.M):
-            cfg = _shm.WorkerConfig(
-                shm_name=self._seg.name, index=i, M=self.M, seed=seed,
-                spec=slab, spin=self.spin, payload=payloads[i],
-                stats=self._stats_slab.spec)
-            p = ctx.Process(target=_shm.worker_main, args=(cfg,), daemon=True)
-            p.start()
-            self._procs.append(p)
+        # cross-process trace propagation: when the parent has tracing on
+        # with a run dir, ship a TraceConfig so each worker flushes its own
+        # spans-<pid>.jsonl into the same run (None otherwise — free)
+        trace_cfg = _traceprop.current()
+        with _span("host.spawn"):
+            for i in range(self.M):
+                cfg = _shm.WorkerConfig(
+                    shm_name=self._seg.name, index=i, M=self.M, seed=seed,
+                    spec=slab, spin=self.spin, payload=payloads[i],
+                    stats=self._stats_slab.spec, trace=trace_cfg)
+                p = ctx.Process(target=_shm.worker_main, args=(cfg,),
+                                daemon=True)
+                p.start()
+                self._procs.append(p)
 
     # -- harvesting ---------------------------------------------------------
 
@@ -511,11 +533,26 @@ class ProcHostPool(HostPool):
             self._out.add(i)
             self._v["ctrl"][i] = _shm.CMD_STEP
 
+    def liveness(self) -> dict:
+        """Per-worker liveness from the shared-memory ``last_beat_ns`` rows
+        (wall clock, written by workers even while idle) plus dead-process
+        detection — /healthz tells "slow" from "dead" without waiting for a
+        recv timeout."""
+        beats = []
+        slab = self._stats_slab
+        if slab is not None and slab.counters is not None:
+            col = slab.spec.fields.index("last_beat_ns")
+            beats = [int(b) for b in slab.counters[:, col]]
+        dead = [] if self._closed else [
+            i for i, p in enumerate(self._procs) if not p.is_alive()]
+        return {"now_ns": time.time_ns(), "workers": self.M,
+                "last_beat_ns": beats, "dead": dead}
+
     def stats(self) -> dict:
         """Parent counters + the per-worker shared-memory stat rows
-        (steps / resets / errors / wait_ns / busy_ns), aggregated with zero
-        pickling. Readable even after workers die — the rows live in the
-        parent-owned segment."""
+        (steps / resets / errors / wait_ns / busy_ns / last_beat_ns),
+        aggregated with zero pickling. Readable even after workers die —
+        the rows live in the parent-owned segment."""
         out = super().stats()
         out["backend"] = "proc"
         if self._stats_slab is not None:

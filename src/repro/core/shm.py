@@ -234,6 +234,7 @@ class WorkerConfig:
     spin: SpinConfig = field(default_factory=SpinConfig)
     payload: bytes = b""                 # pickled env factory
     stats: object = None                 # telemetry.procstats.StatSpec | None
+    trace: object = None                 # telemetry.traceprop.TraceConfig | None
 
 
 def _write_error(views: dict, i: int, op: str, exc: BaseException) -> None:
@@ -301,9 +302,25 @@ def worker_main(cfg: WorkerConfig) -> None:
         from repro.telemetry.procstats import StatSlab
         slab = StatSlab.attach(cfg.stats)
         srow = slab.row(i)
+    # per-process tracing (telemetry.traceprop): the parent ships its
+    # TraceConfig only when tracing is on, so the default pays nothing.
+    # The tracer writes spans-<pid>.jsonl with its meta header eagerly;
+    # periodic + finally flushes make crash output mergeable, and a
+    # SIGKILLed worker's already-flushed prefix is still valid JSONL.
+    from repro.telemetry.spans import CachedSpan
+    tracer = None
+    t_flush = time.monotonic()
+    if cfg.trace is not None:
+        from repro.telemetry import traceprop
+        tracer = traceprop.init_worker(cfg.trace, role=f"host-worker-{i}")
+    step_span = CachedSpan("worker.step")
+    reset_span = CachedSpan("worker.reset")
+    beat_i = 0
     try:
         while True:
             t_wait = time.monotonic_ns()
+            if srow is not None:
+                srow.set("last_beat_ns", time.time_ns())
             while True:                          # wait for a command
                 if v["stop"][0]:
                     return
@@ -311,40 +328,51 @@ def worker_main(cfg: WorkerConfig) -> None:
                 if cmd in (CMD_RESET, CMD_STEP):
                     break
                 spin.pause()
+                beat_i += 1
+                if srow is not None and not (beat_i & 63):
+                    # idle-but-alive workers must keep beating, or /healthz
+                    # would call a quiet worker dead; every-64th pause keeps
+                    # the store off the hot handshake path
+                    srow.set("last_beat_ns", time.time_ns())
             spin.reset()
             t_busy = time.monotonic_ns()
             if srow is not None:
                 srow.add("wait_ns", t_busy - t_wait)
             op = "reset"
             try:
-                if env is None:
-                    env = pickle.loads(cfg.payload)()
-                if cmd == CMD_RESET:
-                    obs = env.reset(int(v["seed"][i]))
-                    rew, done, score, has_score, is_step = \
-                        0.0, False, 0.0, 0, 0
-                else:
-                    op = "step"
-                    obs, rew, done, info = env.step(v["act"][i].copy())
-                    is_step = 1
-                    info = info if isinstance(info, dict) else {}
-                    has_score = 1 if "score" in info else 0
-                    score = float(info.get("score", 0.0))
-                    if done:
-                        episode += 1
-                        op = "reset"
-                        obs = env.reset(cfg.seed + i + cfg.M * episode)
-                v["obs"][i] = np.asarray(obs, v["obs"].dtype).reshape(
-                    cfg.spec.obs_shape)
-                v["rew"][i] = np.asarray(rew, np.float32)
-                v["done"][i] = np.uint8(bool(done))
-                v["score"][i] = np.float32(score)
-                v["meta"][i, 0] = np.uint8(is_step)
-                v["meta"][i, 1] = np.uint8(has_score)
-                v["ctrl"][i] = READY
+                with (step_span if cmd == CMD_STEP else reset_span):
+                    if env is None:
+                        env = pickle.loads(cfg.payload)()
+                    if cmd == CMD_RESET:
+                        obs = env.reset(int(v["seed"][i]))
+                        rew, done, score, has_score, is_step = \
+                            0.0, False, 0.0, 0, 0
+                    else:
+                        op = "step"
+                        obs, rew, done, info = env.step(v["act"][i].copy())
+                        is_step = 1
+                        info = info if isinstance(info, dict) else {}
+                        has_score = 1 if "score" in info else 0
+                        score = float(info.get("score", 0.0))
+                        if done:
+                            episode += 1
+                            op = "reset"
+                            obs = env.reset(cfg.seed + i + cfg.M * episode)
+                    v["obs"][i] = np.asarray(obs, v["obs"].dtype).reshape(
+                        cfg.spec.obs_shape)
+                    v["rew"][i] = np.asarray(rew, np.float32)
+                    v["done"][i] = np.uint8(bool(done))
+                    v["score"][i] = np.float32(score)
+                    v["meta"][i, 0] = np.uint8(is_step)
+                    v["meta"][i, 1] = np.uint8(has_score)
+                    v["ctrl"][i] = READY
                 if srow is not None:
                     srow.add("steps" if is_step else "resets")
                     srow.add("busy_ns", time.monotonic_ns() - t_busy)
+                    srow.set("last_beat_ns", time.time_ns())
+                if tracer is not None and time.monotonic() - t_flush > 0.25:
+                    tracer.flush()
+                    t_flush = time.monotonic()
             except Exception as e:   # noqa: BLE001 — forwarded to the parent
                 _write_error(v, i, op, e)
                 v["ctrl"][i] = ERROR
@@ -356,6 +384,13 @@ def worker_main(cfg: WorkerConfig) -> None:
         if callable(close):
             try:
                 close()
+            except Exception:
+                pass
+        if tracer is not None:
+            # crash-safe: clean exit, stop-flag exit, and the ERROR return
+            # all pass through here before the process dies
+            try:
+                tracer.flush()
             except Exception:
                 pass
         del v, srow                              # release buffer views

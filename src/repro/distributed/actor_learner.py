@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.core import shm
 from repro.telemetry import span as _span
+from repro.telemetry import traceprop as _traceprop
 from repro.telemetry.procstats import (ACTOR_FIELDS, STALENESS_EDGES,
                                        StatSlab)
 
@@ -208,6 +209,7 @@ class ActorConfig:
     payload_dist: bytes = b""
     jitter_ms: float = 0.0   # injected per-step latency (bench/fault tests)
     stats: object = None     # telemetry.procstats.StatSpec | None
+    trace: object = None     # telemetry.traceprop.TraceConfig | None
 
 
 class Fragment(NamedTuple):
@@ -257,6 +259,18 @@ def actor_main(cfg: ActorConfig) -> None:
         # seqlock retries / staleness histogram, aggregated by the learner
         slab = StatSlab.attach(cfg.stats)
         srow = slab.row(me)
+    # per-process tracing: spans flush to this actor's own spans-<pid>.jsonl
+    # (meta header written eagerly, so a killed actor still leaves a
+    # mergeable file); CachedSpans are no-ops when the parent shipped no
+    # trace config
+    from repro.telemetry.spans import CachedSpan
+    tracer = None
+    if cfg.trace is not None:
+        from repro.telemetry import traceprop
+        tracer = traceprop.init_worker(cfg.trace, role=f"actor-{me}")
+    rollout_span = CachedSpan("actor.rollout")
+    refresh_span = CachedSpan("actor.param_refresh")
+    t_flush = time.monotonic()
     try:
         env = pickle.loads(cfg.payload_env)
         policy = pickle.loads(cfg.payload_policy)
@@ -279,16 +293,21 @@ def actor_main(cfg: ActorConfig) -> None:
         v["astat"][me] = A_RUN
         while not v["stop"][0]:
             v["hbeat"][me] += 1
+            if srow is not None:
+                # wall-clock liveness beat: /healthz reads its age to tell a
+                # slow actor from a dead one (idle passes still beat)
+                srow.set("last_beat_ns", time.time_ns())
             produced = False
             t_pass = time.monotonic_ns()
             for s in range(spec.num_shards):
                 if v["stop"][0] or int(v["assign"][s]) != me:
                     continue
                 if int(v["pver"][0]) != pver:
-                    leaves, pver = read_params_seqlock(v, pviews, cfg.spin,
-                                                       srow)
-                    params = jax.tree.unflatten(
-                        tmpl, [jnp.asarray(l) for l in leaves])
+                    with refresh_span:
+                        leaves, pver = read_params_seqlock(v, pviews,
+                                                           cfg.spin, srow)
+                        params = jax.tree.unflatten(
+                            tmpl, [jnp.asarray(l) for l in leaves])
                     if srow is not None:
                         srow.add("param_loads")
                 ep = int(v["epoch"][s])
@@ -312,36 +331,39 @@ def actor_main(cfg: ActorConfig) -> None:
                     if srow is not None:  # backpressure bounds staleness
                         srow.add("ring_full")
                     continue
-                v["fctrl"][s, slot] = SLOT_WRITING
-                kroll = jax.random.fold_in(jax.random.fold_in(
-                    jax.random.fold_in(jax.random.fold_in(base, 2), s),
-                    ep), st[2])
-                carry, traj, last_value = jfrag(params, st[0], kroll)
-                if cfg.jitter_ms > 0.0:
-                    # emulate jitter_ms/step of host latency, ±50%
-                    time.sleep(T * cfg.jitter_ms / 1e3 * rng.uniform(0.5, 1.5))
-                v["obs"][s, slot] = np.asarray(traj.obs, np.float32)
-                v["act"][s, slot] = np.asarray(traj.actions,
-                                               v["act"].dtype)
-                v["logp"][s, slot] = np.asarray(traj.logprobs, np.float32)
-                v["val"][s, slot] = np.asarray(traj.values, np.float32)
-                v["rew"][s, slot] = np.asarray(traj.rewards, np.float32)
-                v["done"][s, slot] = np.asarray(traj.dones, np.uint8)
-                v["reset"][s, slot] = np.asarray(traj.resets, np.uint8)
-                v["i_score"][s, slot] = np.asarray(traj.infos["score"],
-                                                   np.float32)
-                v["i_ret"][s, slot] = np.asarray(
-                    traj.infos["episode_return"], np.float32)
-                v["i_len"][s, slot] = np.asarray(
-                    traj.infos["episode_length"], np.int32)
-                v["i_valid"][s, slot] = np.asarray(traj.infos["valid"],
-                                                   np.uint8)
-                v["boot"][s, slot] = np.asarray(last_value, np.float32)
-                v["fver"][s, slot] = pver
-                v["fseq"][s, slot] = st[2]
-                v["factor"][s, slot] = me
-                st[0], st[2] = carry, st[2] + 1
-                v["fctrl"][s, slot] = SLOT_FULL     # commit (written last)
+                with rollout_span:   # claim → jitted rollout → commit
+                    v["fctrl"][s, slot] = SLOT_WRITING
+                    kroll = jax.random.fold_in(jax.random.fold_in(
+                        jax.random.fold_in(jax.random.fold_in(base, 2), s),
+                        ep), st[2])
+                    carry, traj, last_value = jfrag(params, st[0], kroll)
+                    if cfg.jitter_ms > 0.0:
+                        # emulate jitter_ms/step of host latency, ±50%
+                        time.sleep(T * cfg.jitter_ms / 1e3
+                                   * rng.uniform(0.5, 1.5))
+                    v["obs"][s, slot] = np.asarray(traj.obs, np.float32)
+                    v["act"][s, slot] = np.asarray(traj.actions,
+                                                   v["act"].dtype)
+                    v["logp"][s, slot] = np.asarray(traj.logprobs,
+                                                    np.float32)
+                    v["val"][s, slot] = np.asarray(traj.values, np.float32)
+                    v["rew"][s, slot] = np.asarray(traj.rewards, np.float32)
+                    v["done"][s, slot] = np.asarray(traj.dones, np.uint8)
+                    v["reset"][s, slot] = np.asarray(traj.resets, np.uint8)
+                    v["i_score"][s, slot] = np.asarray(traj.infos["score"],
+                                                       np.float32)
+                    v["i_ret"][s, slot] = np.asarray(
+                        traj.infos["episode_return"], np.float32)
+                    v["i_len"][s, slot] = np.asarray(
+                        traj.infos["episode_length"], np.int32)
+                    v["i_valid"][s, slot] = np.asarray(traj.infos["valid"],
+                                                       np.uint8)
+                    v["boot"][s, slot] = np.asarray(last_value, np.float32)
+                    v["fver"][s, slot] = pver
+                    v["fseq"][s, slot] = st[2]
+                    v["factor"][s, slot] = me
+                    st[0], st[2] = carry, st[2] + 1
+                    v["fctrl"][s, slot] = SLOT_FULL  # commit (written last)
                 produced = True
                 if srow is not None:
                     srow.add("fragments")
@@ -355,6 +377,9 @@ def actor_main(cfg: ActorConfig) -> None:
                 spin.reset()
             else:
                 spin.pause()
+            if tracer is not None and time.monotonic() - t_flush > 0.25:
+                tracer.flush()
+                t_flush = time.monotonic()
         v["astat"][me] = A_EXIT
     except Exception as e:    # noqa: BLE001 — forwarded to the learner
         shm._write_error(v, me, "step", e)
@@ -362,6 +387,13 @@ def actor_main(cfg: ActorConfig) -> None:
         if srow is not None:
             srow.add("errors")
     finally:
+        if tracer is not None:
+            # crash-safe: the error path above and clean exits both flush
+            # whatever the periodic flush hasn't written yet
+            try:
+                tracer.flush()
+            except Exception:
+                pass
         del v, pviews, srow
         seg.close()
         if slab is not None:
@@ -431,20 +463,26 @@ class AsyncRollouts:
         # written lock-free by actors, aggregated in stats() — and readable
         # for dead actors, whose rows freeze at their last write
         self._stats_slab = StatSlab.create(N, ACTOR_FIELDS, STALENESS_EDGES)
+        # cross-process trace propagation: ship the learner's TraceConfig
+        # (None when tracing is off) so each actor flushes its own
+        # spans-<pid>.jsonl into the same run dir
+        trace_cfg = _traceprop.current()
         ctx = get_context("spawn")
         self._procs = []
         try:
-            for a in range(N):
-                p = ctx.Process(
-                    target=actor_main,
-                    args=(ActorConfig(
-                        shm_name=self._seg.name, actor_id=a, spec=self.spec,
-                        seed=seed, spin=self.spin, payload_env=env_p,
-                        payload_policy=pol_p, payload_dist=dist_p,
-                        jitter_ms=jitter, stats=self._stats_slab.spec),),
-                    daemon=True, name=f"repro-actor-{a}")
-                p.start()
-                self._procs.append(p)
+            with _span("async.spawn"):
+                for a in range(N):
+                    p = ctx.Process(
+                        target=actor_main,
+                        args=(ActorConfig(
+                            shm_name=self._seg.name, actor_id=a,
+                            spec=self.spec, seed=seed, spin=self.spin,
+                            payload_env=env_p, payload_policy=pol_p,
+                            payload_dist=dist_p, jitter_ms=jitter,
+                            stats=self._stats_slab.spec, trace=trace_cfg),),
+                        daemon=True, name=f"repro-actor-{a}")
+                    p.start()
+                    self._procs.append(p)
         except Exception:
             self.close()
             raise
@@ -594,6 +632,29 @@ class AsyncRollouts:
         return [a for a, p in enumerate(self._procs)
                 if a not in self._dead and p.is_alive()]
 
+    def liveness(self) -> dict:
+        """Per-actor liveness for /healthz: wall-clock ``last_beat_ns``
+        from the stat slab (actors beat every pass, even idle ones) plus
+        dead detection that does NOT wait for the learner's next
+        ``wait_fragments`` — a killed process shows up here immediately."""
+        beats = []
+        slab = getattr(self, "_stats_slab", None)
+        if slab is not None and slab.counters is not None:
+            col = slab.spec.fields.index("last_beat_ns")
+            beats = [int(b) for b in slab.counters[:, col]]
+        v = getattr(self, "_v", None)
+        dead = set(self._dead)
+        stopping = v is None or bool(v["stop"][0])
+        for a, p in enumerate(self._procs):
+            if p.is_alive():
+                continue
+            if stopping and (v is None or int(v["astat"][a]) == A_EXIT):
+                continue                # clean shutdown, not a death
+            dead.add(a)
+        return {"now_ns": time.time_ns(),
+                "workers": self.spec.num_actors,
+                "last_beat_ns": beats, "dead": sorted(dead)}
+
     def stats(self) -> dict:
         out = {
             "assign": self._v["assign"].tolist(),
@@ -602,6 +663,10 @@ class AsyncRollouts:
             "dead": sorted(self._dead),
             "straggler_flags": list(self.straggler_flags),
             "reshards": len(self.events),
+            "liveness": self.liveness(),
+            # staleness age per actor: seconds since its last fragment
+            # arrived (None before the first one) + the monitor medians
+            "stragglers": [m.stats() for m in self._monitors],
         }
         if self._stats_slab is not None:
             # per-actor shared-memory rows: steps/fragments/ring stalls/

@@ -51,9 +51,11 @@ class StragglerMonitor:
         self.k = k
         self.min_samples = min_samples
         self.flagged = 0
+        self.last_seen: Optional[float] = None   # monotonic s of last record
 
     def record(self, dt: float) -> bool:
         self.times.append(dt)
+        self.last_seen = time.monotonic()
         if len(self.times) >= self.min_samples:
             if dt > self.k * _true_median(self.times):
                 self.flagged += 1
@@ -63,6 +65,21 @@ class StragglerMonitor:
     @property
     def median(self) -> float:
         return _true_median(self.times)
+
+    def age(self) -> Optional[float]:
+        """Seconds since the last recorded arrival — the staleness signal
+        /healthz and the async tier's metrics surface. ``None`` until the
+        first record (a monitor that never saw a sample is booting, not
+        stale)."""
+        if self.last_seen is None:
+            return None
+        return time.monotonic() - self.last_seen
+
+    def stats(self) -> dict:
+        """The monitor's exportable view: rolling median, flag count, and
+        seconds-since-last-arrival staleness age."""
+        return {"median_s": self.median, "flagged": int(self.flagged),
+                "samples": len(self.times), "age_s": self.age()}
 
 
 class ResilientLoop:

@@ -76,6 +76,11 @@ def main():
                     help="telemetry for --ocean runs: spans + metrics "
                          "stream into this directory; inspect with "
                          "`python -m repro.telemetry summarize <dir>`")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics, /healthz, /spans on "
+                         "127.0.0.1:<port> for the duration of --ocean "
+                         "training (0 = pick a free ephemeral port; "
+                         "default: no server)")
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="wrap the first --profile-launches engine "
                          "launches in a jax.profiler trace written to DIR "
@@ -201,6 +206,12 @@ def main():
         from repro.configs.ocean import ocean_tcfg, preset
         if args.run_dir:
             telemetry.enable(args.run_dir)
+        server = None
+        if args.metrics_port is not None:
+            from repro.telemetry.http import MetricsServer
+            server = MetricsServer(port=args.metrics_port)
+            print(f"monitoring: {server.url}/metrics  "
+                  f"{server.url}/healthz  {server.url}/spans")
         on_launch = None
         if args.profile:
             prof = {"launches": 0, "active": False}
@@ -224,10 +235,16 @@ def main():
                                   engine_backend=backend,
                                   updates_per_launch=args.updates_per_launch,
                                   checkpoint_every=args.save_every,
+                                  metrics_port=(server.port if server
+                                                else 0),
                                   **async_overrides)
                 tr = Trainer(OCEAN[name](), tcfg, hidden=p.hidden,
                              recurrent=p.recurrent, conv=p.conv,
                              seed=args.seed, log_dir=args.run_dir)
+                if server is not None:
+                    # fixed key: replaces the previous env's source, so a
+                    # closed engine never lingers as a dead health source
+                    server.add_source("engine", tr.engine.stats)
                 steps = args.total_env_steps or p.total_steps
                 extra = (f" actors={tcfg.num_actors} staleness="
                          f"{tcfg.staleness_mode}<={tcfg.max_staleness}"
@@ -250,6 +267,8 @@ def main():
                 print(f"  -> {status} score={m['score']:.3f} "
                       f"steps={m['env_steps']} sps={m['sps']:.0f}")
         finally:
+            if server is not None:
+                server.close()
             if args.profile and prof["active"]:
                 jax.profiler.stop_trace()
             if args.run_dir:

@@ -435,6 +435,21 @@ class TrainEngine:
     def steps_per_update(self) -> int:
         return self.tcfg.unroll_length * self.vec.batch_size
 
+    def stats(self) -> dict:
+        """Live snapshot for monitoring endpoints: the backend name plus
+        whatever worker-pool stats the tier exposes (host tier: the
+        HostPool slab aggregates + liveness; async tier: actor slab
+        aggregates, liveness, straggler monitors). Cheap enough to call
+        from an HTTP request thread mid-run."""
+        out = {"backend": self.backend}
+        if self.backend == "host":
+            pool = getattr(self.hvec, "pool", None)
+            if pool is not None:
+                out["pool"] = pool.stats()
+        if self.backend == "async":
+            out["rollouts"] = self.rollouts.stats()
+        return out
+
     # -- the unified run loop --------------------------------------------------
     def run(self, total_steps: int, *, target_score: Optional[float] = None,
             on_update: Optional[Callable] = None,

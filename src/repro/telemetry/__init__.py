@@ -13,23 +13,30 @@ Quickstart::
     # later, from a shell:
     #   python -m repro.telemetry summarize runs/exp1
     #   python -m repro.telemetry export-trace runs/exp1 --out trace.json
+    #   python -m repro.telemetry compare --gate   # bench regression check
+    #   curl localhost:9100/healthz                # with MetricsServer up
 
 Everything here is jax-free (stdlib + numpy): spawn workers in
 ``core/shm.py`` and ``distributed/actor_learner.py`` import this chain
 before jax exists in their interpreter, and the fork-guard depends on that.
 Imports are eager (no PEP 562 laziness) — the whole package is a few
-hundred lines of stdlib with no heavy deps.
+hundred lines of stdlib with no heavy deps. ``http`` and ``benchwatch``
+are NOT imported eagerly: training loops that never start a monitoring
+server shouldn't pay for http.server machinery, and benches import
+benchwatch directly.
 """
 from repro.telemetry.registry import (Counter, Gauge, Histogram, Registry,
                                       registry)
-from repro.telemetry.spans import (SpanRecord, Tracer, chrome_trace, disable,
+from repro.telemetry.spans import (CachedSpan, SpanRecord, Tracer,
+                                   chrome_trace, clock_offset_ns, disable,
                                    enable, enabled, flush, get_tracer, span,
                                    summarize_records)
 from repro.telemetry.timers import TierTimer
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "registry",
-    "SpanRecord", "Tracer", "chrome_trace", "disable", "enable", "enabled",
+    "CachedSpan", "SpanRecord", "Tracer", "chrome_trace", "clock_offset_ns",
+    "disable", "enable", "enabled",
     "flush", "get_tracer", "span", "summarize_records",
     "TierTimer",
 ]

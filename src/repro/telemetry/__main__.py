@@ -1,12 +1,22 @@
 """Run-inspection CLI.
 
     python -m repro.telemetry summarize <run_dir>
-        Per-span p50/p99 latency table (from <run_dir>/spans.jsonl) plus an
-        SPS curve reconstructed from the run's metrics JSONL stream.
+        Per-span p50/p99 latency table (merged across the learner's
+        spans.jsonl and every worker's spans-<pid>.jsonl) plus an SPS
+        curve reconstructed from the run's metrics JSONL stream.
 
     python -m repro.telemetry export-trace <run_dir> [--out trace.json]
-        Convert spans.jsonl to Chrome trace-event JSON for Perfetto /
-        chrome://tracing.
+        Merge all spans*.jsonl files into ONE Chrome trace-event JSON
+        (Perfetto / chrome://tracing) with per-process lanes: worker
+        timestamps are rebased onto the shared wall clock via each
+        file's recorded clock offset, so a learner ``launch`` and the
+        worker ``step``s it waited on line up on one timeline.
+
+    python -m repro.telemetry compare [--history BENCH_history.jsonl]
+                                      [--gate] [--noise 0.1] [--window 5]
+        Compare the newest bench record per bench against its rolling
+        same-machine baseline (see telemetry/benchwatch.py). Report-only
+        by default; --gate exits non-zero on confirmed regressions.
 """
 from __future__ import annotations
 
@@ -16,8 +26,8 @@ import json
 import os
 import sys
 
-from repro.telemetry.spans import (SPANS_FILE, chrome_trace, percentile,
-                                   summarize_records)
+from repro.telemetry import benchwatch, traceprop
+from repro.telemetry.spans import percentile, summarize_records
 
 _SPARK = "▁▂▃▄▅▆▇█"
 
@@ -33,18 +43,18 @@ def _read_jsonl(path: str) -> list:
 
 
 def load_spans(run_dir: str) -> list:
-    path = os.path.join(run_dir, SPANS_FILE)
-    if not os.path.exists(path):
-        return []
-    return _read_jsonl(path)
+    """All span records in the run dir, merged across processes and
+    rebased onto the shared wall clock (meta header lines excluded)."""
+    return traceprop.merged_records(run_dir)
 
 
 def load_metrics(run_dir: str) -> list:
-    """All metric records in the run dir (every *.jsonl except spans),
-    ordered by env_steps/step."""
+    """All metric records in the run dir (every *.jsonl except span
+    files), ordered by env_steps/step."""
     recs = []
     for path in sorted(glob.glob(os.path.join(run_dir, "*.jsonl"))):
-        if os.path.basename(path) == SPANS_FILE:
+        base = os.path.basename(path)
+        if base.startswith("spans") and base.endswith(".jsonl"):
             continue
         recs.extend(_read_jsonl(path))
     recs.sort(key=lambda r: r.get("env_steps", r.get("step", 0)))
@@ -67,9 +77,10 @@ def summarize(run_dir: str, out=sys.stdout) -> dict:
     """Print the summary; returns the data (the tests consume the dict)."""
     spans = load_spans(run_dir)
     summary = summarize_records(spans)
+    procs = sorted({(r.get("pid"), r.get("role", "main")) for r in spans})
     w = max([len(n) for n in summary] + [4])
-    print(f"# spans — {len(spans)} records, "
-          f"{len(summary)} names ({run_dir})", file=out)
+    print(f"# spans — {len(spans)} records, {len(summary)} names, "
+          f"{len(procs)} process(es) ({run_dir})", file=out)
     hdr = (f"{'name':<{w}}  {'count':>7}  {'p50_ms':>9}  {'p99_ms':>9}  "
            f"{'mean_ms':>9}  {'max_ms':>9}  {'total_ms':>10}")
     print(hdr, file=out)
@@ -95,15 +106,16 @@ def summarize(run_dir: str, out=sys.stdout) -> dict:
     elif metrics:
         print(f"\n# {len(metrics)} metric records (no sps key)", file=out)
     return {"spans": summary, "sps_curve": curve,
-            "n_span_records": len(spans)}
+            "n_span_records": len(spans), "n_processes": len(procs)}
 
 
 def export_trace(run_dir: str, out_path: str) -> int:
-    spans = load_spans(run_dir)
-    trace = chrome_trace(spans)
+    """Merged multi-process Chrome trace; returns the number of duration
+    (``ph: "X"``) events written — lane-name metadata events don't count."""
+    trace = traceprop.merge_chrome_trace(run_dir)
     with open(out_path, "w") as f:
         json.dump(trace, f)
-    return len(trace["traceEvents"])
+    return sum(1 for e in trace["traceEvents"] if e.get("ph") == "X")
 
 
 def main(argv=None) -> int:
@@ -112,10 +124,28 @@ def main(argv=None) -> int:
     sub = p.add_subparsers(dest="cmd", required=True)
     ps = sub.add_parser("summarize", help="p50/p99 per span + SPS curve")
     ps.add_argument("run_dir")
-    pe = sub.add_parser("export-trace", help="spans.jsonl -> Chrome JSON")
+    pe = sub.add_parser("export-trace",
+                        help="merge spans*.jsonl -> one Chrome trace JSON")
     pe.add_argument("run_dir")
     pe.add_argument("--out", default="")
+    pc = sub.add_parser("compare",
+                        help="newest bench record vs rolling baseline")
+    pc.add_argument("--history", default=benchwatch.HISTORY_FILE)
+    pc.add_argument("--gate", action="store_true",
+                    help="exit 1 on confirmed regressions (default: report)")
+    pc.add_argument("--report-only", action="store_true",
+                    help="explicit no-gate (the default; for CI readability)")
+    pc.add_argument("--noise", type=float, default=benchwatch.DEFAULT_NOISE)
+    pc.add_argument("--window", type=int, default=benchwatch.DEFAULT_WINDOW)
     args = p.parse_args(argv)
+
+    if args.cmd == "compare":
+        result = benchwatch.compare(args.history, noise=args.noise,
+                                    window=args.window)
+        print(benchwatch.format_report(result))
+        if args.gate and not args.report_only and result["regressions"]:
+            return 1
+        return 0
 
     if not os.path.isdir(args.run_dir):
         print(f"error: not a directory: {args.run_dir}", file=sys.stderr)

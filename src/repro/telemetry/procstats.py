@@ -30,13 +30,20 @@ __all__ = ["StatSpec", "StatRow", "StatSlab",
            "HOST_FIELDS", "ACTOR_FIELDS", "STALENESS_EDGES"]
 
 # ProcHostPool workers: env steps/resets, errors, ns spent waiting for a
-# command vs. executing one.
-HOST_FIELDS = ("steps", "resets", "errors", "wait_ns", "busy_ns")
+# command vs. executing one, plus the wall-clock liveness beat.
+# ``last_beat_ns`` is ``time.time_ns()`` (wall, cross-process comparable —
+# NOT monotonic) set by the worker whenever it proves it is scheduled; the
+# /healthz endpoint reads its age to tell "slow" from "dead" without
+# waiting for a recv timeout. A gauge, not a counter: use ``set``.
+HOST_FIELDS = ("steps", "resets", "errors", "wait_ns", "busy_ns",
+               "last_beat_ns")
 
 # actor_learner actors: env steps, committed fragments, ring-full stalls,
-# seqlock read retries, param refreshes, errors, wait vs. inference ns.
+# seqlock read retries, param refreshes, errors, wait vs. inference ns,
+# and the same wall-clock liveness beat as HOST_FIELDS.
 ACTOR_FIELDS = ("steps", "fragments", "ring_full", "seqlock_retries",
-                "param_loads", "errors", "wait_ns", "busy_ns")
+                "param_loads", "errors", "wait_ns", "busy_ns",
+                "last_beat_ns")
 
 # staleness histogram (learner-updates-behind at fragment commit): buckets
 # are <=0, <=1, <=2, <=4, <=8, >8

@@ -29,16 +29,39 @@ import json
 import os
 import threading
 import time
+import uuid
 from collections import deque
 from contextvars import ContextVar
 from typing import List, NamedTuple, Optional
 
 __all__ = [
-    "Tracer", "SpanRecord", "span", "enable", "disable", "enabled",
-    "get_tracer", "flush", "percentile", "summarize_records",
+    "Tracer", "SpanRecord", "span", "CachedSpan", "enable", "disable",
+    "enabled", "get_tracer", "flush", "clock_offset_ns", "percentile",
+    "summarize_records",
 ]
 
 SPANS_FILE = "spans.jsonl"
+
+
+def clock_offset_ns() -> int:
+    """Wall-clock minus monotonic-clock offset for THIS process, in ns.
+
+    Span timestamps use ``time.monotonic_ns()`` (cheap, never steps
+    backward) whose epoch is arbitrary per process — raw ``ts_ns`` values
+    from two processes are not comparable. Each process records its own
+    offset once, in its spans-file meta header, and the merge step maps
+    every span onto the shared wall clock via ``ts_ns + offset``. Median
+    of five tight samples rejects a scheduler preemption landing between
+    the two clock reads.
+    """
+    samples = []
+    for _ in range(5):
+        a = time.monotonic_ns()
+        w = time.time_ns()
+        b = time.monotonic_ns()
+        samples.append(w - (a + b) // 2)
+    samples.sort()
+    return samples[2]
 
 # (depth, parent-name) of the innermost open span on this thread/task
 _STACK: ContextVar[tuple] = ContextVar("repro_span_stack", default=(0, ""))
@@ -96,18 +119,84 @@ class _Span:
         return False
 
 
+class CachedSpan:
+    """A reusable named span for non-reentrant hot call sites.
+
+    ``span(name)`` allocates one ``_Span`` per use on the enabled path;
+    a ``CachedSpan`` held by the call site (e.g. ``TierTimer``'s launch /
+    fetch contexts) is allocation-free in BOTH modes: the tracer is
+    re-read on every ``__enter__`` so mid-run enable/disable still works.
+    Not safe for the same instance to be entered concurrently from two
+    threads or re-entered recursively — one instance per call site.
+    """
+    __slots__ = ("name", "_ring", "_t0", "_tok", "_depth", "_parent")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._ring = None
+
+    def __enter__(self):
+        t = _TRACER
+        if t is None:
+            self._ring = None
+            return self
+        self._ring = t._ring
+        depth, parent = _STACK.get((0, ""))
+        self._depth = depth
+        self._parent = parent
+        self._tok = _STACK.set((depth + 1, self.name))
+        self._t0 = time.monotonic_ns()
+        return self
+
+    def __exit__(self, et, ev, tb):
+        ring = self._ring
+        if ring is None:
+            return False
+        dur = time.monotonic_ns() - self._t0
+        _STACK.reset(self._tok)
+        self._ring = None
+        ring.append(SpanRecord(
+            self.name, self._t0, dur, os.getpid(),
+            threading.get_ident() & 0xFFFFFFFF, self._depth, self._parent))
+        return False
+
+
 class Tracer:
     """Bounded ring of completed spans. ``deque(maxlen=)`` appends are
     GIL-atomic, so concurrent host threads record without a lock; the lock
-    below only serializes drains/flushes against each other."""
+    below only serializes drains/flushes against each other.
 
-    def __init__(self, run_dir: Optional[str] = None, capacity: int = 65536):
+    With a ``run_dir``, the tracer owns one spans file (``file_name``,
+    default ``spans.jsonl``; workers use ``spans-<pid>.jsonl``) and writes
+    a meta header line on creation — ``{"kind": "meta", trace_id, pid,
+    role, clock_offset_ns}`` — eagerly, so even a process killed before
+    its first flush leaves a mergeable (if empty) file behind.
+    """
+
+    def __init__(self, run_dir: Optional[str] = None, capacity: int = 65536,
+                 *, file_name: Optional[str] = None,
+                 trace_id: Optional[str] = None, role: str = "main"):
         self.run_dir = run_dir
         self.capacity = int(capacity)
+        self.file_name = file_name or SPANS_FILE
+        self.trace_id = trace_id or uuid.uuid4().hex[:16]
+        self.role = role
+        self.clock_offset_ns = clock_offset_ns()
         self._ring: deque = deque(maxlen=self.capacity)
         self._io_lock = threading.Lock()
         if run_dir:
             os.makedirs(run_dir, exist_ok=True)
+            self._write_meta()
+
+    def _write_meta(self) -> None:
+        rec = {"kind": "meta", "schema": 1, "trace_id": self.trace_id,
+               "pid": os.getpid(), "role": self.role,
+               "clock_offset_ns": self.clock_offset_ns}
+        path = os.path.join(self.run_dir, self.file_name)
+        with self._io_lock, open(path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
 
     # -- recording ---------------------------------------------------------
     def span(self, name: str) -> _Span:
@@ -130,7 +219,7 @@ class Tracer:
 
     # -- export ------------------------------------------------------------
     def flush(self) -> int:
-        """Append drained spans to ``<run_dir>/spans.jsonl``; returns the
+        """Append drained spans to ``<run_dir>/<file_name>``; returns the
         number written. Without a run_dir the ring just keeps accumulating
         (bounded) and flush is a no-op returning 0."""
         if not self.run_dir:
@@ -138,7 +227,7 @@ class Tracer:
         recs = self.drain()
         if not recs:
             return 0
-        path = os.path.join(self.run_dir, SPANS_FILE)
+        path = os.path.join(self.run_dir, self.file_name)
         with self._io_lock, open(path, "a") as f:
             for r in recs:
                 f.write(json.dumps(r._asdict()) + "\n")
@@ -166,14 +255,18 @@ def span(name: str):
     return _Span(t._ring, name)
 
 
-def enable(run_dir: Optional[str] = None, capacity: int = 65536) -> Tracer:
+def enable(run_dir: Optional[str] = None, capacity: int = 65536, *,
+           file_name: Optional[str] = None, trace_id: Optional[str] = None,
+           role: str = "main") -> Tracer:
     """Turn tracing on process-wide; returns the (new) tracer. Re-enabling
     with the same args keeps the existing tracer so spans survive."""
     global _TRACER
     if (_TRACER is not None and _TRACER.run_dir == run_dir
-            and _TRACER.capacity == int(capacity)):
+            and _TRACER.capacity == int(capacity)
+            and _TRACER.file_name == (file_name or SPANS_FILE)):
         return _TRACER
-    _TRACER = Tracer(run_dir=run_dir, capacity=capacity)
+    _TRACER = Tracer(run_dir=run_dir, capacity=capacity,
+                     file_name=file_name, trace_id=trace_id, role=role)
     return _TRACER
 
 

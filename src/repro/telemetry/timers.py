@@ -12,7 +12,10 @@ tier's history records carry the *same* keys with the *same* semantics:
 
 ``launch()`` / ``fetch()`` return context managers that both time the block
 and open the matching span (``engine.launch`` / ``engine.fetch``), so the
-Chrome trace and the history records agree by construction.
+Chrome trace and the history records agree by construction. Both contexts
+are pre-built once per TierTimer on a ``CachedSpan`` — the per-launch hot
+loop allocates nothing and the tracer enabled-check happens exactly once
+per block entry, whether tracing is on or off.
 
 jax-free (stdlib only).
 """
@@ -20,19 +23,21 @@ from __future__ import annotations
 
 import time
 
-from repro.telemetry.spans import span
+from repro.telemetry.spans import CachedSpan
 
 __all__ = ["TierTimer"]
 
 
 class _Timed:
-    """Times a block into ``timer.<attr>`` (ms) and mirrors it as a span."""
+    """Times a block into ``timer.<attr>`` (ms) and mirrors it as a span.
+    Reused across launches — one instance per (timer, attr); not reentrant,
+    which launch/fetch blocks never are."""
     __slots__ = ("_timer", "_attr", "_span", "_t0")
 
     def __init__(self, timer: "TierTimer", attr: str, span_name: str):
         self._timer = timer
         self._attr = attr
-        self._span = span(span_name)
+        self._span = CachedSpan(span_name)
 
     def __enter__(self):
         self._span.__enter__()
@@ -56,12 +61,14 @@ class TierTimer:
         self.t0 = time.perf_counter()
         self.launch_ms = 0.0
         self.fetch_ms = 0.0
+        self._launch = _Timed(self, "launch_ms", "engine.launch")
+        self._fetch = _Timed(self, "fetch_ms", "engine.fetch")
 
     def launch(self) -> _Timed:
-        return _Timed(self, "launch_ms", "engine.launch")
+        return self._launch
 
     def fetch(self) -> _Timed:
-        return _Timed(self, "fetch_ms", "engine.fetch")
+        return self._fetch
 
     def elapsed(self) -> float:
         return time.perf_counter() - self.t0

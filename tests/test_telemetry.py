@@ -177,7 +177,10 @@ def test_flush_and_cli_summarize(tmp_path):
     out = str(tmp_path / "trace.json")
     assert tcli.export_trace(run_dir, out) == 6
     with open(out) as f:
-        assert len(json.load(f)["traceEvents"]) == 6
+        events = json.load(f)["traceEvents"]
+    # 6 duration events + one process_name lane-metadata event per process
+    assert sum(1 for e in events if e.get("ph") == "X") == 6
+    assert sum(1 for e in events if e.get("ph") == "M") == 1
 
     assert tcli.main(["summarize", run_dir]) == 0
     assert tcli.main(["summarize", str(tmp_path / "nope")]) == 2
